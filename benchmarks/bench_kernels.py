@@ -1,0 +1,59 @@
+"""Kernel micro-bench: wall time per call (interpret mode on CPU — the
+numbers validate plumbing, not TPU perf) + emulation-efficiency of the
+fused approximate add vs the unfused op-by-op jnp pipeline."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adders import approx_add_mod
+from repro.core.specs import paper_spec
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> List[str]:
+    out = []
+    spec = paper_spec("haloc_axa")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
+    b = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
+
+    us = _time(lambda x, y: ops.approx_add(x, y, spec), a, b)
+    out.append(f"kernel/approx_add_pallas_1Mi32,{us:.0f},interpret=True")
+
+    @jax.jit
+    def unfused(x, y):
+        xu = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        yu = jax.lax.bitcast_convert_type(y, jnp.uint32)
+        return jax.lax.bitcast_convert_type(
+            approx_add_mod(xu, yu, spec), jnp.int32)
+
+    us2 = _time(unfused, a, b)
+    out.append(f"kernel/approx_add_unfused_xla_1Mi32,{us2:.0f},baseline")
+
+    a8 = jnp.asarray(rng.integers(-128, 128, (256, 512), np.int8))
+    b8 = jnp.asarray(rng.integers(-128, 128, (512, 256), np.int8))
+    us3 = _time(lambda x, y: ops.approx_matmul(x, y, spec), a8, b8)
+    out.append(f"kernel/approx_matmul_256x512x256,{us3:.0f},interpret=True")
+
+    print("\n== Kernel micro-bench (CPU interpret; TPU is the target) ==")
+    for line in out:
+        print("  " + line)
+    return out
+
+
+if __name__ == "__main__":
+    run()

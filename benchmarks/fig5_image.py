@@ -1,0 +1,58 @@
+"""Fig 5: 512x512 image reconstruction (FFT -> IFFT) per adder,
+PSNR + SSIM + the paper's quality band.  The paper's test image is not
+redistributable; a deterministic synthetic image with matching content
+classes is used (DESIGN.md §2) — the adder ORDERING is the target."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.hwcost import PAPER_TABLE1
+from repro.core.specs import TABLE1_KINDS, paper_spec
+from repro.image.pipeline import reconstruct, synthetic_image
+from repro.image.quality import psnr, quality_band, ssim
+
+PAPER_SSIM = {"accurate": 1.0, "loa": 0.85, "oloca": 0.85, "herloa": 0.94,
+              "m_herloa": 0.94, "haloc_axa": 0.92, "loawa": 0.75}
+
+
+def run(size: int = 512, save_png: bool = True) -> List[str]:
+    img = synthetic_image(size)
+    out = []
+    results = {}
+    print(f"\n== Fig 5 (image reconstruction, {size}x{size}) ==")
+    print(f"{'adder':10s} {'PSNR dB':>9s} {'SSIM':>7s} {'paper':>7s} {'band':>12s}")
+    for kind in TABLE1_KINDS:
+        t0 = time.time()
+        rec = reconstruct(img, paper_spec(kind))
+        dt = time.time() - t0
+        p, s = psnr(img, rec), ssim(img, rec)
+        results[kind] = (p, s, rec)
+        print(f"{kind:10s} {p:9.2f} {s:7.3f} {PAPER_SSIM[kind]:7.2f} "
+              f"{quality_band(s):>12s}")
+        out.append(f"fig5_image/{kind},{dt * 1e6:.0f},"
+                   f"PSNR={p:.2f};SSIM={s:.3f};paper_SSIM={PAPER_SSIM[kind]}")
+    order = sorted((k for k in results if k != "accurate"),
+                   key=lambda k: -results[k][1])
+    paper_order = sorted((k for k in PAPER_SSIM if k != "accurate"),
+                         key=lambda k: -PAPER_SSIM[k])
+    print(f"model order: {' > '.join(order)}")
+    print(f"paper order: {' > '.join(paper_order)}")
+    if save_png:
+        try:
+            from PIL import Image
+            import numpy as np
+            import os
+            os.makedirs("experiments/images", exist_ok=True)
+            Image.fromarray(img).save("experiments/images/source.png")
+            for kind, (_, _, rec) in results.items():
+                Image.fromarray(rec).save(
+                    f"experiments/images/recon_{kind}.png")
+        except Exception:
+            pass
+    return out
+
+
+if __name__ == "__main__":
+    run()

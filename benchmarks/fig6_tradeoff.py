@@ -1,0 +1,39 @@
+"""Fig 6: SSIM vs normalized switching energy per adder — the paper's
+headline trade-off plot (HALOC-AxA: lowest energy at high-quality SSIM)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.hwcost import switching_energy_fj
+from repro.core.specs import TABLE1_KINDS, paper_spec
+from repro.image.pipeline import reconstruct, synthetic_image
+from repro.image.quality import ssim
+
+
+def run(size: int = 256) -> List[str]:
+    img = synthetic_image(size)
+    rows = []
+    e_acc = switching_energy_fj(paper_spec("accurate"))
+    for kind in TABLE1_KINDS:
+        t0 = time.time()
+        e = switching_energy_fj(paper_spec(kind)) / e_acc
+        s = ssim(img, reconstruct(img, paper_spec(kind)))
+        rows.append((kind, e, s, (time.time() - t0) * 1e6))
+    print("\n== Fig 6 (SSIM vs normalized switching energy) ==")
+    print(f"{'adder':10s} {'E/E_accurate':>13s} {'SSIM':>7s}")
+    for kind, e, s, _ in rows:
+        bar = "#" * int(40 * e)
+        print(f"{kind:10s} {e:13.3f} {s:7.3f}  {bar}")
+    best = min((r for r in rows if r[2] > 0.8), key=lambda r: r[1],
+               default=None)
+    if best:
+        print(f"lowest-energy adder with SSIM>0.8: {best[0]} "
+              f"(E/Eacc={best[1]:.3f}) — paper's claim for HALOC-AxA")
+    return [f"fig6_tradeoff/{k},{us:.0f},E_norm={e:.3f};SSIM={s:.3f}"
+            for k, e, s, us in rows]
+
+
+if __name__ == "__main__":
+    run()

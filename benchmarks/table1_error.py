@@ -1,0 +1,39 @@
+"""Table I (right half): MED / MRED over 10^7 random 32-bit patterns
+(N=32, m=10, k=5), compared against the paper's values."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.hwcost import PAPER_TABLE1
+from repro.core.metrics import simulate_error_metrics
+from repro.core.specs import TABLE1_KINDS, paper_spec
+
+N_SAMPLES = 10_000_000
+
+
+def run(n_samples: int = N_SAMPLES) -> List[str]:
+    out = []
+    print(f"\n== Table I (error, {n_samples:.0e} random patterns) ==")
+    print(f"{'adder':10s} {'MED(model)':>12s} {'MED(paper)':>11s} "
+          f"{'MRED(model)':>12s} {'MRED(paper)':>12s} {'ER':>7s}")
+    for kind in TABLE1_KINDS:
+        if kind == "accurate":
+            continue
+        t0 = time.time()
+        rep = simulate_error_metrics(paper_spec(kind), n_samples=n_samples)
+        dt = time.time() - t0
+        p = PAPER_TABLE1[kind]
+        print(f"{kind:10s} {rep.med:12.1f} {p['med']:11.1f} "
+              f"{rep.mred:12.3e} {p['mred']:12.2e} {rep.error_rate:7.4f}")
+        out.append(
+            f"table1_error/{kind},{dt * 1e6:.0f},"
+            f"MED={rep.med:.1f};paper={p['med']};"
+            f"MED_err_pct={100 * (rep.med - p['med']) / p['med']:.1f};"
+            f"MRED={rep.mred:.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

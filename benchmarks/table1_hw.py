@@ -1,0 +1,39 @@
+"""Table I (left half): transistor count / switching power / delay /
+energy for the seven adders, from the calibrated gate-level model, with
+residuals against the paper's HSPICE numbers."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.hwcost import PAPER_TABLE1, report
+from repro.core.specs import TABLE1_KINDS, paper_spec
+
+
+def run() -> List[str]:
+    rows = []
+    t0 = time.time()
+    for kind in TABLE1_KINDS:
+        r = report(paper_spec(kind))
+        p = PAPER_TABLE1[kind]
+        rows.append((kind, r, p))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    out = []
+    print(f"\n== Table I (hardware) ==")
+    print(f"{'adder':10s} {'T(model/paper)':>16s} {'E fJ (m/p)':>16s} "
+          f"{'delay ns (m/p)':>16s} {'P uW (m/p)':>18s}")
+    for kind, r, p in rows:
+        print(f"{kind:10s} {r.transistors:6d}/{p['trans']:<6d} "
+              f"{r.energy_fj:7.2f}/{p['energy_fj']:<7.2f} "
+              f"{r.delay_ns:5.3f}/{p['delay_ns']:<5.2f} "
+              f"{r.power_uw:8.1f}/{p['power_uw']:<8.2f}")
+        out.append(f"table1_hw/{kind},{us:.1f},"
+                   f"T={r.transistors};E_fJ={r.energy_fj:.2f};"
+                   f"T_err={r.transistors - p['trans']};"
+                   f"E_err_pct={100 * (r.energy_fj - p['energy_fj']) / p['energy_fj']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

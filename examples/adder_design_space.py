@@ -1,0 +1,44 @@
+"""Design-space exploration beyond the paper: sweep (m, k) for HALOC-AxA
+and map the accuracy/energy Pareto frontier — the knob a deployment would
+tune per application (paper Section III: "The target application's
+tolerance level ... must be carefully considered when determining m").
+
+    PYTHONPATH=src python examples/adder_design_space.py
+"""
+
+from repro.core.hwcost import switching_energy_fj
+from repro.core.metrics import simulate_error_metrics
+from repro.core.specs import AdderSpec, paper_spec
+
+
+def main():
+    print(f"{'m':>3s} {'k':>3s} {'MED':>10s} {'NMED':>11s} {'E fJ':>7s} "
+          f"{'E/Eacc':>7s}")
+    e_acc = switching_energy_fj(AdderSpec(kind="accurate"))
+    rows = []
+    for m in (6, 8, 10, 12, 14):
+        for k in (0, m // 4, m // 2):
+            if k > m - 2:
+                continue
+            spec = AdderSpec(kind="haloc_axa", n_bits=32, lsm_bits=m,
+                             const_bits=k)
+            rep = simulate_error_metrics(spec, n_samples=300_000)
+            e = switching_energy_fj(spec)
+            rows.append((m, k, rep.med, rep.nmed, e, e / e_acc))
+            print(f"{m:3d} {k:3d} {rep.med:10.1f} {rep.nmed:11.3e} "
+                  f"{e:7.2f} {e / e_acc:7.3f}")
+    # Pareto: lowest energy at each accuracy level
+    rows.sort(key=lambda r: r[4])
+    best_nmed = float("inf")
+    print("\nPareto frontier (energy ascending, NMED improving):")
+    for m, k, med, nmed, e, rel in rows:
+        if nmed < best_nmed:
+            best_nmed = nmed
+            print(f"  m={m:2d} k={k:2d}  E={e:.2f}fJ ({rel:.3f}x)  "
+                  f"NMED={nmed:.3e}")
+    p = paper_spec("haloc_axa")
+    print(f"\npaper's point: m={p.lsm_bits}, k={p.const_bits}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's adder in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (AdderSpec, approx_add, paper_spec,
+                        simulate_error_metrics)
+from repro.core.hwcost import report
+from repro.core.metrics import summarize
+
+# 1. build the paper's adder: 32-bit, 10-bit approximate LSM, 5 constant bits
+spec = paper_spec("haloc_axa")
+a, b = np.uint64(53_000), np.uint64(12_345)
+print(f"HALOC-AxA: {int(a)} + {int(b)} = {int(approx_add(a, b, spec))} "
+      f"(exact {int(a + b)})")
+
+# 2. error metrics vs the baselines (paper Table I, right half)
+reports = [simulate_error_metrics(paper_spec(k), n_samples=200_000)
+           for k in ("loa", "herloa", "m_herloa", "haloc_axa")]
+print()
+print(summarize(reports))
+
+# 3. hardware cost (paper Table I, left half)
+print()
+for k in ("accurate", "herloa", "haloc_axa"):
+    r = report(paper_spec(k))
+    print(f"{k:10s} {r.transistors} transistors, "
+          f"{r.energy_fj:.1f} fJ/op, {r.delay_ns:.2f} ns")
+
+# 4. vectorized over tensors (the form the LM integration uses)
+rng = np.random.default_rng(0)
+x = rng.integers(0, 1 << 32, 8, dtype=np.uint64)
+y = rng.integers(0, 1 << 32, 8, dtype=np.uint64)
+ed = np.abs(approx_add(x, y, spec).astype(np.int64)
+            - (x + y).astype(np.int64))
+print(f"\nbatch of 8 adds, error distances: {ed.tolist()} (all < 2^11)")

@@ -1,0 +1,28 @@
+# Core paper contribution: the HALOC-AxA approximate adder family,
+# error metrics, hardware cost models, and training-compatible wrappers.
+from repro.core.specs import (  # noqa: F401
+    ACCURATE,
+    ALL_KINDS,
+    ETA,
+    HALOC_AXA,
+    HERLOA,
+    LOA,
+    LOAWA,
+    M_HERLOA,
+    OLOCA,
+    TABLE1_KINDS,
+    AdderSpec,
+    paper_spec,
+    table1_specs,
+)
+from repro.core.adders import (  # noqa: F401
+    approx_add,
+    approx_add_mod,
+    lsm_error_bound,
+)
+from repro.core.metrics import (  # noqa: F401
+    ErrorReport,
+    error_distances,
+    exhaustive_error_metrics,
+    simulate_error_metrics,
+)

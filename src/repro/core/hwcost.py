@@ -1,0 +1,145 @@
+"""Switching energy / power / delay model, calibrated to Table I.
+
+The paper measures avg switching power/delay/energy in HSPICE (32nm PTM,
+high-performance).  Without SPICE we use a standard activity-based model:
+
+    E_op  =  sum_over_gates  C_gate * Vdd^2 * alpha_gate
+
+where C_gate is proportional to the gate's transistor count (switched
+capacitance proxy) and alpha_gate is the gate's measured toggle activity
+over random input vectors (from the bit-exact behavioral simulation).
+
+Calibration: a single fJ-per-(transistor*toggle) constant is fit on the
+ACCURATE adder's Table-I energy (66.25 fJ); every other adder's energy is
+then PREDICTED and compared against Table I in benchmarks/table1_hw.py.
+
+Delay: the paper reports 0.24 ns for the accurate 32-bit CLA and 0.21 ns
+for every approximate adder (the (N-m)-bit MSM dominates; all LSMs are
+single-gate-depth).  We model delay as CLA group-chain depth * per-stage
+delay, calibrated on those two points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core import specs as S
+from repro.core.adders import approx_add
+from repro.core.netlist import (
+    T_AND2, T_OR2, T_XOR2, lsm_gates, transistor_count, _cla_transistors,
+)
+from repro.core.specs import AdderSpec
+
+# Table-I anchors (paper, 32nm PTM HP, 32-bit, m=10, k=5).
+PAPER_TABLE1 = {
+    "accurate": {"trans": 2208, "power_uw": 302.19, "delay_ns": 0.24,
+                 "energy_fj": 66.25, "med": None, "mred": None},
+    "loa": {"trans": 1548, "power_uw": 242.18, "delay_ns": 0.21,
+            "energy_fj": 55.05, "med": 191.9, "mred": 6.19e-8},
+    "loawa": {"trans": 1542, "power_uw": 237.86, "delay_ns": 0.21,
+              "energy_fj": 53.42, "med": 255.7, "mred": 8.25e-8},
+    "oloca": {"trans": 1518, "power_uw": 226.69, "delay_ns": 0.21,
+              "energy_fj": 51.71, "med": 190.6, "mred": 6.15e-8},
+    "herloa": {"trans": 1632, "power_uw": 265.15, "delay_ns": 0.21,
+               "energy_fj": 60.04, "med": 97.7, "mred": 2.94e-8},
+    "m_herloa": {"trans": 1572, "power_uw": 233.57, "delay_ns": 0.21,
+                 "energy_fj": 52.92, "med": 94.9, "mred": 2.91e-8},
+    "haloc_axa": {"trans": 1542, "power_uw": 226.39, "delay_ns": 0.21,
+                  "energy_fj": 51.45, "med": 123.9, "mred": 3.77e-8},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HwReport:
+    spec: AdderSpec
+    transistors: int
+    energy_fj: float
+    delay_ns: float
+    power_uw: float
+
+    def row(self) -> Dict[str, object]:
+        return {"adder": self.spec.kind, "transistors": self.transistors,
+                "energy_fj": self.energy_fj, "delay_ns": self.delay_ns,
+                "power_uw": self.power_uw}
+
+
+def _toggle_activity(spec: AdderSpec, n_vectors: int = 20000,
+                     seed: int = 11) -> float:
+    """Average per-output-bit toggle rate of the adder over a random
+    vector stream (proxy for internal switching activity)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
+    b = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
+    s = approx_add(a, b, spec)
+    flips = np.bitwise_xor(s[1:], s[:-1])
+    ones = np.unpackbits(flips.view(np.uint8)).sum()
+    return float(ones) / (n_vectors - 1) / (spec.n_bits + 1)
+
+
+# Energy split: the MSM (carry logic) toggles more than the LSM's
+# single-level gates.  Weight MSM transistors by the adder's output toggle
+# activity and LSM gates by their input activity (0.5 for uniform bits).
+_LSM_ALPHA = 0.5
+
+
+def _energy_units(spec: AdderSpec) -> float:
+    msm_t = (_cla_transistors(spec.n_bits) if spec.kind == S.ACCURATE
+             else _cla_transistors(spec.msm_bits))
+    act = _toggle_activity(spec)
+    g = lsm_gates(spec)
+    lsm_t = g["or2"] * T_OR2 + g["and2"] * T_AND2 + g["xor2"] * T_XOR2
+    return msm_t * act + lsm_t * _LSM_ALPHA
+
+
+_CAL = None
+
+
+def _calibration():
+    """Affine fit E = alpha * units + beta on TWO anchors (accurate, LOA);
+    the remaining five adders' energies are PREDICTIONS (residuals reported
+    in benchmarks/table1_hw.py).  beta captures activity-independent
+    overheads (input loading, drivers) that unit-scaling alone misses."""
+    global _CAL
+    if _CAL is None:
+        u_acc = _energy_units(AdderSpec(kind=S.ACCURATE, n_bits=32))
+        u_loa = _energy_units(AdderSpec(kind=S.LOA, n_bits=32,
+                                        lsm_bits=10, const_bits=0))
+        e_acc = PAPER_TABLE1["accurate"]["energy_fj"]
+        e_loa = PAPER_TABLE1["loa"]["energy_fj"]
+        alpha = (e_acc - e_loa) / (u_acc - u_loa)
+        beta = e_acc - alpha * u_acc
+        _CAL = (alpha, beta)
+    return _CAL
+
+
+def switching_energy_fj(spec: AdderSpec) -> float:
+    alpha, beta = _calibration()
+    return alpha * _energy_units(spec) + beta
+
+
+def delay_ns(spec: AdderSpec) -> float:
+    """CLA group-chain model calibrated on (32b -> 0.24ns, 22b -> 0.21ns)."""
+    bits = spec.n_bits if spec.kind == S.ACCURATE else spec.msm_bits
+    groups = -(-bits // 4)
+    # delay = a + b * groups; fit on (8 groups, 0.24) and (6 groups, 0.21)
+    a_c, b_c = 0.12, 0.015
+    return a_c + b_c * groups
+
+
+def switching_power_uw(spec: AdderSpec) -> float:
+    # fJ / ns == microwatt
+    return switching_energy_fj(spec) / delay_ns(spec)
+
+
+def report(spec: AdderSpec) -> HwReport:
+    e = switching_energy_fj(spec)
+    d = delay_ns(spec)
+    return HwReport(spec=spec, transistors=transistor_count(spec),
+                    energy_fj=e, delay_ns=d, power_uw=e / d)
+
+
+def energy_per_add_joules(spec: AdderSpec) -> float:
+    return switching_energy_fj(spec) * 1e-15

@@ -1,0 +1,144 @@
+"""Error metrics for approximate adders (paper Section IV).
+
+MED  = mean error distance,        (1/n) * sum |ED_i|
+MRED = mean relative error dist.,  (1/n) * sum |ED_i / S_i,accurate|
+NMED = MED / max_output            (normalized; standard in the AxA field)
+ER   = error rate, fraction of inputs with ED != 0
+WCE  = worst-case error distance
+
+The paper evaluates MED and MRED over 10^7 uniform random 32-bit pairs;
+:func:`simulate_error_metrics` reproduces that experiment (vectorized numpy,
+chunked so 10^7 x several adders stays in memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+from repro.core.adders import approx_add
+from repro.core.specs import AdderSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorReport:
+    spec: AdderSpec
+    n_samples: int
+    med: float
+    mred: float
+    nmed: float
+    error_rate: float
+    wce: int
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "adder": self.spec.kind,
+            "N": self.spec.n_bits,
+            "m": self.spec.lsm_bits,
+            "k": self.spec.effective_const_bits,
+            "samples": self.n_samples,
+            "MED": self.med,
+            "MRED": self.mred,
+            "NMED": self.nmed,
+            "ER": self.error_rate,
+            "WCE": self.wce,
+        }
+
+
+def _random_operands(rng: np.random.Generator, n: int, n_bits: int):
+    # uint64 containers hold the (N+1)-bit sum exactly for N <= 63.
+    if n_bits > 63:
+        raise ValueError("n_bits > 63 not supported by the uint64 simulator")
+    if n_bits <= 32:
+        a = rng.integers(0, 1 << n_bits, size=n, dtype=np.uint64)
+        b = rng.integers(0, 1 << n_bits, size=n, dtype=np.uint64)
+    else:
+        lo = rng.integers(0, 1 << 32, size=(2, n), dtype=np.uint64)
+        hi = rng.integers(0, 1 << (n_bits - 32), size=(2, n), dtype=np.uint64)
+        a = (hi[0] << np.uint64(32)) | lo[0]
+        b = (hi[1] << np.uint64(32)) | lo[1]
+    return a, b
+
+
+def error_distances(a: np.ndarray, b: np.ndarray, spec: AdderSpec) -> np.ndarray:
+    """|approx(a,b) - (a+b)| as int64 (exact for N <= 62)."""
+    exact = a + b
+    approx = approx_add(a, b, spec)
+    return np.abs(approx.astype(np.int64) - exact.astype(np.int64))
+
+
+def simulate_error_metrics(
+    spec: AdderSpec,
+    n_samples: int = 10_000_000,
+    seed: int = 2025,
+    chunk: int = 2_000_000,
+    rng: Optional[np.random.Generator] = None,
+) -> ErrorReport:
+    """Monte-Carlo MED/MRED/NMED/ER/WCE over uniform random operand pairs."""
+    rng = rng or np.random.default_rng(seed)
+    total_ed = 0.0
+    total_red = 0.0
+    total_err = 0
+    wce = 0
+    done = 0
+    while done < n_samples:
+        n = min(chunk, n_samples - done)
+        a, b = _random_operands(rng, n, spec.n_bits)
+        ed = error_distances(a, b, spec)
+        exact = (a + b).astype(np.float64)
+        total_ed += float(ed.sum(dtype=np.float64))
+        # P(exact == 0) is ~2^-2N; guard anyway (MRED undefined at 0).
+        nz = exact > 0
+        total_red += float((ed[nz] / exact[nz]).sum(dtype=np.float64))
+        total_err += int((ed != 0).sum())
+        wce = max(wce, int(ed.max(initial=0)))
+        done += n
+    max_out = float((1 << (spec.n_bits + 1)) - 2)
+    return ErrorReport(
+        spec=spec,
+        n_samples=n_samples,
+        med=total_ed / n_samples,
+        mred=total_red / n_samples,
+        nmed=(total_ed / n_samples) / max_out,
+        error_rate=total_err / n_samples,
+        wce=wce,
+    )
+
+
+def exhaustive_error_metrics(spec: AdderSpec) -> ErrorReport:
+    """Exact metrics by full enumeration — feasible for N <= ~12."""
+    n_bits = spec.n_bits
+    if n_bits > 12:
+        raise ValueError("exhaustive enumeration is limited to N <= 12")
+    vals = np.arange(1 << n_bits, dtype=np.uint64)
+    a = np.repeat(vals, 1 << n_bits)
+    b = np.tile(vals, 1 << n_bits)
+    ed = error_distances(a, b, spec)
+    exact = (a + b).astype(np.float64)
+    nz = exact > 0
+    n = a.size
+    max_out = float((1 << (n_bits + 1)) - 2)
+    med = float(ed.sum(dtype=np.float64)) / n
+    return ErrorReport(
+        spec=spec,
+        n_samples=n,
+        med=med,
+        mred=float((ed[nz] / exact[nz]).sum(dtype=np.float64)) / n,
+        nmed=med / max_out,
+        error_rate=float((ed != 0).sum()) / n,
+        wce=int(ed.max(initial=0)),
+    )
+
+
+def summarize(reports: Iterable[ErrorReport]) -> str:
+    rows = [r.row() for r in reports]
+    header = f"{'adder':<10} {'MED':>12} {'MRED':>12} {'NMED':>12} {'ER':>8} {'WCE':>8}"
+    lines = [header, "-" * len(header)]
+    for r in rows:
+        lines.append(
+            f"{r['adder']:<10} {r['MED']:>12.2f} {r['MRED']:>12.3e} "
+            f"{r['NMED']:>12.3e} {r['ER']:>8.4f} {r['WCE']:>8d}"
+        )
+    return "\n".join(lines)

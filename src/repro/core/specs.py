@@ -1,0 +1,123 @@
+"""Adder specifications.
+
+An :class:`AdderSpec` fully determines the bit-level behaviour of one of the
+static approximate adders studied by the paper (plus the accurate baseline).
+
+Paper defaults (Section IV): N=32, m=10 (approximate LSM width), k=5
+(constant-one section width) — "consistent with [15] and [16]".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# Adder kinds, in the order used by the paper's Table I.
+ACCURATE = "accurate"
+LOA = "loa"
+LOAWA = "loawa"
+OLOCA = "oloca"
+HERLOA = "herloa"
+M_HERLOA = "m_herloa"
+HALOC_AXA = "haloc_axa"
+# Bonus baseline from the background section (Zhu et al. [11]).
+ETA = "eta"
+
+ALL_KINDS: Tuple[str, ...] = (
+    ACCURATE,
+    LOA,
+    LOAWA,
+    OLOCA,
+    HERLOA,
+    M_HERLOA,
+    HALOC_AXA,
+    ETA,
+)
+
+# Kinds whose LSM has a constant-one lower section of width k.
+CONST_KINDS = frozenset({OLOCA, M_HERLOA, HALOC_AXA})
+# Kinds compared in the paper's Table I (everything except ETA).
+TABLE1_KINDS: Tuple[str, ...] = (
+    ACCURATE,
+    LOA,
+    LOAWA,
+    OLOCA,
+    HERLOA,
+    M_HERLOA,
+    HALOC_AXA,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdderSpec:
+    """Static approximate adder configuration.
+
+    Attributes:
+      kind: one of :data:`ALL_KINDS`.
+      n_bits: total adder width N (operands are N-bit unsigned; the sum has
+        N+1 significant bits).
+      lsm_bits: approximate LSM width m. The MSM (exact part) is N-m bits.
+      const_bits: constant-one section width k (only meaningful for OLOCA,
+        M-HERLOA and HALOC-AxA; must be 0 for the others).
+    """
+
+    kind: str
+    n_bits: int = 32
+    lsm_bits: int = 10
+    const_bits: int = 5
+
+    def __post_init__(self):
+        if self.kind not in ALL_KINDS:
+            raise ValueError(f"unknown adder kind {self.kind!r}")
+        if self.kind == ACCURATE:
+            return
+        if not (1 <= self.lsm_bits <= self.n_bits):
+            raise ValueError(
+                f"lsm_bits must be in [1, n_bits]; got m={self.lsm_bits}, "
+                f"N={self.n_bits}"
+            )
+        k = self.const_bits if self.kind in CONST_KINDS else 0
+        if not (0 <= k <= self.lsm_bits):
+            raise ValueError(
+                f"const_bits must be in [0, lsm_bits]; got k={k}, "
+                f"m={self.lsm_bits}"
+            )
+        if self.kind in (HERLOA, M_HERLOA, HALOC_AXA) and self.lsm_bits < 2:
+            raise ValueError(f"{self.kind} needs lsm_bits >= 2")
+        if self.kind in (M_HERLOA, HALOC_AXA) and k > self.lsm_bits - 2:
+            raise ValueError(
+                f"{self.kind} needs const_bits <= lsm_bits - 2 "
+                f"(two HA / error-reduction positions); got k={k}, m={self.lsm_bits}"
+            )
+
+    @property
+    def effective_const_bits(self) -> int:
+        return self.const_bits if self.kind in CONST_KINDS else 0
+
+    @property
+    def msm_bits(self) -> int:
+        return self.n_bits - (0 if self.kind == ACCURATE else self.lsm_bits)
+
+    def replace(self, **kw) -> "AdderSpec":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def short_name(self) -> str:
+        if self.kind == ACCURATE:
+            return f"accurate{self.n_bits}"
+        k = self.effective_const_bits
+        return f"{self.kind}-n{self.n_bits}m{self.lsm_bits}" + (
+            f"k{k}" if self.kind in CONST_KINDS else ""
+        )
+
+
+def paper_spec(kind: str, n_bits: int = 32, lsm_bits: int = 10,
+               const_bits: int = 5) -> AdderSpec:
+    """Spec with the paper's Section-IV parameters (N=32, m=10, k=5)."""
+    return AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=lsm_bits,
+                     const_bits=const_bits if kind in CONST_KINDS else 0)
+
+
+def table1_specs() -> Tuple[AdderSpec, ...]:
+    """The seven adders of the paper's Table I at N=32, m=10, k=5."""
+    return tuple(paper_spec(kind) for kind in TABLE1_KINDS)

@@ -1,0 +1,3 @@
+from repro.image.quality import psnr, ssim  # noqa: F401
+from repro.image.fft import fft2_fixed, ifft2_fixed  # noqa: F401
+from repro.image.pipeline import reconstruct, synthetic_image  # noqa: F401

@@ -1,0 +1,164 @@
+"""Fixed-point radix-2 FFT/IFFT built on the approximate adder family.
+
+This is the paper's application (Section IV): image reconstruction through
+FFT -> IFFT with ACCURATE multipliers and APPROXIMATE adders.
+
+Number format
+-------------
+Signed two's-complement fixed point stored mod 2^N in uint64 (N = the
+adder width, paper: 32).  Twiddle factors are exact Q1.TW fixed point
+(TW=14) and multiplies are exact (accurate multipliers); every ADD and SUB
+inside the butterflies goes through the configured approximate adder
+(SUB = exact two's-complement negation + approximate add; the paper's
+adders have no carry-in port, so this is the faithful construction).
+
+Scaling: the FORWARD transform is unscaled (coefficients grow to ~N*N*255,
+well inside 32 bits), so spectral magnitudes dominate the approximate LSM
+error; INVERSE butterflies halve their outputs (overall 1/N per axis).
+The data fraction width `frac_bits` is the calibration knob (the paper
+does not state its Q-format; see EXPERIMENTS.md §Image for the sweep).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.adders import approx_add
+from repro.core.specs import AdderSpec
+
+TWIDDLE_FRAC = 14
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedFFTConfig:
+    spec: AdderSpec
+    frac_bits: int = 6
+
+    @property
+    def n_bits(self) -> int:
+        return self.spec.n_bits
+
+
+def _mask(cfg) -> np.uint64:
+    return np.uint64((1 << cfg.n_bits) - 1)
+
+
+def to_fixed(x: np.ndarray, cfg: FixedFFTConfig) -> np.ndarray:
+    q = np.round(np.asarray(x, np.float64) * (1 << cfg.frac_bits)).astype(
+        np.int64)
+    return (q.astype(np.uint64)) & _mask(cfg)
+
+
+def from_fixed(u: np.ndarray, cfg: FixedFFTConfig) -> np.ndarray:
+    n = cfg.n_bits
+    s = u.astype(np.int64)
+    sign = np.int64(1) << (n - 1)
+    s = (s ^ sign) - sign
+    return s.astype(np.float64) / (1 << cfg.frac_bits)
+
+
+def _add(a, b, cfg):
+    return approx_add(a, b, cfg.spec) & _mask(cfg)
+
+
+def _neg(a, cfg):
+    return (~a + np.uint64(1)) & _mask(cfg)
+
+
+def _sub(a, b, cfg):
+    return _add(a, _neg(b, cfg), cfg)
+
+
+def _sar(u, shift, cfg):
+    """Arithmetic shift right with round-to-nearest (exact hardware op)."""
+    n = cfg.n_bits
+    s = u.astype(np.int64)
+    sign = np.int64(1) << (n - 1)
+    s = (s ^ sign) - sign
+    s = (s + (1 << (shift - 1))) >> shift
+    return s.astype(np.uint64) & _mask(cfg)
+
+
+def _cmul(ar, ai, wr, wi, cfg):
+    """(ar + i ai) * (wr + i wi); exact multiplies, approximate adds.
+
+    wr/wi are Q1.TWIDDLE_FRAC int64 scalars/arrays."""
+    n = cfg.n_bits
+    sign = np.int64(1) << (n - 1)
+    sar = (ar.astype(np.int64) ^ sign) - sign
+    sai = (ai.astype(np.int64) ^ sign) - sign
+    # exact products, rounded back to the data format
+    rr = (sar * wr + (1 << (TWIDDLE_FRAC - 1))) >> TWIDDLE_FRAC
+    ri = (sar * wi + (1 << (TWIDDLE_FRAC - 1))) >> TWIDDLE_FRAC
+    ir = (sai * wr + (1 << (TWIDDLE_FRAC - 1))) >> TWIDDLE_FRAC
+    ii = (sai * wi + (1 << (TWIDDLE_FRAC - 1))) >> TWIDDLE_FRAC
+    m = _mask(cfg)
+    # re = rr - ii ; im = ri + ir  (approximate adds)
+    re = _sub(rr.astype(np.uint64) & m, ii.astype(np.uint64) & m, cfg)
+    im = _add(ri.astype(np.uint64) & m, ir.astype(np.uint64) & m, cfg)
+    return re, im
+
+
+def _bit_reverse_perm(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def fft_fixed(re: np.ndarray, im: np.ndarray, cfg: FixedFFTConfig,
+              inverse: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """Iterative radix-2 DIT FFT along the LAST axis (vectorized over the
+    leading axes).  Forward: scaled by 1/n (per-stage halving).
+    Inverse: unscaled."""
+    n = re.shape[-1]
+    assert n & (n - 1) == 0, "length must be a power of two"
+    perm = _bit_reverse_perm(n)
+    re = re[..., perm].copy()
+    im = im[..., perm].copy()
+    stages = n.bit_length() - 1
+    sgn = 1.0 if inverse else -1.0
+    for s in range(1, stages + 1):
+        half = 1 << (s - 1)
+        ang = sgn * 2.0 * np.pi * np.arange(half) / (1 << s)
+        wr = np.round(np.cos(ang) * (1 << TWIDDLE_FRAC)).astype(np.int64)
+        wi = np.round(np.sin(ang) * (1 << TWIDDLE_FRAC)).astype(np.int64)
+        shp = re.shape[:-1] + (n // (1 << s), 1 << s)
+        re_b = re.reshape(shp)
+        im_b = im.reshape(shp)
+        a_re, b_re = re_b[..., :half], re_b[..., half:]
+        a_im, b_im = im_b[..., :half], im_b[..., half:]
+        t_re, t_im = _cmul(b_re, b_im, wr, wi, cfg)
+        top_re = _add(a_re, t_re, cfg)
+        top_im = _add(a_im, t_im, cfg)
+        bot_re = _sub(a_re, t_re, cfg)
+        bot_im = _sub(a_im, t_im, cfg)
+        if inverse:
+            # halve each inverse stage -> overall 1/n.  The FORWARD pass is
+            # unscaled so spectral coefficients keep full magnitude (the
+            # approximate LSM bits then sit far below the signal scale,
+            # matching the paper's high reconstruction quality).
+            top_re, top_im = _sar(top_re, 1, cfg), _sar(top_im, 1, cfg)
+            bot_re, bot_im = _sar(bot_re, 1, cfg), _sar(bot_im, 1, cfg)
+        re = np.concatenate([top_re, bot_re], axis=-1).reshape(re.shape)
+        im = np.concatenate([top_im, bot_im], axis=-1).reshape(im.shape)
+    return re, im
+
+
+def fft2_fixed(re, im, cfg: FixedFFTConfig):
+    re, im = fft_fixed(re, im, cfg)                      # rows
+    re, im = np.swapaxes(re, -1, -2), np.swapaxes(im, -1, -2)
+    re, im = fft_fixed(re, im, cfg)                      # cols
+    return np.swapaxes(re, -1, -2), np.swapaxes(im, -1, -2)
+
+
+def ifft2_fixed(re, im, cfg: FixedFFTConfig):
+    re, im = fft_fixed(re, im, cfg, inverse=True)
+    re, im = np.swapaxes(re, -1, -2), np.swapaxes(im, -1, -2)
+    re, im = fft_fixed(re, im, cfg, inverse=True)
+    return np.swapaxes(re, -1, -2), np.swapaxes(im, -1, -2)

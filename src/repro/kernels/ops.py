@@ -1,0 +1,64 @@
+"""jit'd public wrappers around the Pallas kernels (padding, reshaping,
+interpret-mode selection).
+
+On this CPU container `interpret=True` executes the kernel bodies in
+Python for correctness validation; on TPU pass interpret=False to compile
+through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.specs import AdderSpec
+from repro.kernels.approx_add import approx_add_pallas
+from repro.kernels.approx_matmul import approx_matmul_pallas
+from repro.kernels.butterfly import butterfly_pallas
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def approx_add(a, b, spec: AdderSpec, interpret: bool = True):
+    """Elementwise approximate add of two int32 tensors (any shape)."""
+    shape = a.shape
+    flat = a.reshape(-1)
+    size = flat.shape[0]
+    n_cols = 256
+    rows = -(-size // n_cols)
+    ap = jnp.zeros((rows * n_cols,), jnp.int32).at[:size].set(a.reshape(-1))
+    bp = jnp.zeros((rows * n_cols,), jnp.int32).at[:size].set(b.reshape(-1))
+    ap, m0, n0 = _pad2(ap.reshape(rows, n_cols), 256, 256)
+    bp, _, _ = _pad2(bp.reshape(rows, n_cols), 256, 256)
+    out = approx_add_pallas(ap, bp, spec, interpret=interpret)
+    return out[:m0, :n0].reshape(-1)[:size].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def approx_matmul(a, b, spec: AdderSpec, block=(128, 128, 128),
+                  interpret: bool = True):
+    """int8 (M,K) @ int8 (K,N) -> int32, approximate K-tile accumulation."""
+    bm, bn, bk = block
+    ap, m0, _ = _pad2(a, bm, bk)
+    bp, _, n0 = _pad2(b, bk, bn)
+    out = approx_matmul_pallas(ap, bp, spec, block=block,
+                               interpret=interpret)
+    return out[:m0, :n0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "inverse", "interpret"))
+def butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
+              inverse: bool = False, interpret: bool = True):
+    """One radix-2 butterfly stage; all int32 (rows, half) + (half,)."""
+    return butterfly_pallas(a_re, a_im, b_re, b_im, w_re, w_im, spec,
+                            inverse=inverse, interpret=interpret)

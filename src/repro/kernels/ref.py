@@ -1,0 +1,61 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adders import approx_add, approx_add_mod
+from repro.core.specs import AdderSpec
+
+TWIDDLE_FRAC = 14
+
+
+def ref_approx_add(a: np.ndarray, b: np.ndarray, spec: AdderSpec):
+    """int32 two's complement -> int32, via the uint64 behavioral model."""
+    au = a.astype(np.int64).astype(np.uint64) & np.uint64(0xFFFFFFFF)
+    bu = b.astype(np.int64).astype(np.uint64) & np.uint64(0xFFFFFFFF)
+    s = approx_add(au, bu, spec) & np.uint64(0xFFFFFFFF)
+    return s.astype(np.uint32).astype(np.int32)
+
+
+def ref_approx_matmul(a: np.ndarray, b: np.ndarray, spec: AdderSpec,
+                      bk: int = 128):
+    """int8 GEMM with exact per-K-tile dots and approximate inter-tile
+    accumulation, mirroring the kernel's K-tiling exactly."""
+    m, k = a.shape
+    n = b.shape[1]
+    a32 = a.astype(np.int64)
+    b32 = b.astype(np.int64)
+    acc = None
+    for k0 in range(0, k, bk):
+        part = (a32[:, k0:k0 + bk] @ b32[k0:k0 + bk]).astype(np.int32)
+        acc = part if acc is None else ref_approx_add(acc, part, spec)
+    return acc
+
+
+def ref_butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
+                  inverse: bool = False):
+    """int64 reference of one butterfly stage (matches kernel bit-exactly)."""
+    half = 1 << (TWIDDLE_FRAC - 1)
+
+    def mul(x, w):
+        return ((x.astype(np.int64) * w.astype(np.int64) + half)
+                >> TWIDDLE_FRAC).astype(np.int64)
+
+    rr, ri = mul(b_re, w_re), mul(b_re, w_im)
+    ir, ii = mul(b_im, w_re), mul(b_im, w_im)
+
+    def to_i32(x):
+        return (x & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
+
+    t_re = ref_approx_add(to_i32(rr), -to_i32(ii), spec)
+    t_im = ref_approx_add(to_i32(ri), to_i32(ir), spec)
+    top_re = ref_approx_add(a_re, t_re, spec)
+    top_im = ref_approx_add(a_im, t_im, spec)
+    bot_re = ref_approx_add(a_re, -t_re, spec)
+    bot_im = ref_approx_add(a_im, -t_im, spec)
+    if inverse:
+        halve = lambda x: ((x.astype(np.int64) + 1) >> 1).astype(np.int32)
+        return (halve(top_re), halve(top_im), halve(bot_re), halve(bot_im))
+    return top_re, top_im, bot_re, bot_im

@@ -1,0 +1,402 @@
+"""Whole-program cost analysis from optimized HLO text.
+
+XLA's `compiled.cost_analysis()` reports ONLY the entry computation, so a
+scan-over-layers model (a `while` op) loses its loop body — the dominant
+cost.  This analyzer parses the optimized HLO, builds the computation call
+graph (fusions, calls, conditionals, while loops), detects scan trip
+counts from the loop-condition compare, and accumulates:
+
+  - flops            dot (2*prod(out)*prod(contract)) + elementwise
+  - bytes            operand + output bytes of top-level (unfused) ops
+  - collectives      per-kind payload bytes and counts, x trip counts
+  - per-dot table    (shape, flops, times executed) for §Perf analysis
+
+All numbers are per-device (the HLO is the SPMD-partitioned module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate",
+    "abs", "cosine", "sine", "floor", "ceil", "round-nearest-even",
+    "round-nearest-afz", "logistic", "expm1", "log1p", "atan2",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that materialize HBM buffers on TPU (bytes-accessed accounting).
+_BYTES_OPS = frozenset({
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "sort",
+    "gather", "scatter", "dynamic-update-slice", "dynamic-slice",
+    "concatenate", "copy", "pad", "slice", "transpose", "select-and-scatter",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "custom-call",
+})
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OP_RE = re.compile(r"^(\(?[a-z0-9]+\[[^=]*?)\s([\w\-]+)\(")
+
+
+def _shape_list(text: str) -> List[Tuple[str, int]]:
+    """All (dtype, numel) shapes in a type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(DTYPE_BYTES[dt] * n for dt, n in _shape_list(text))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_text: str       # type portion
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_fused: bool = False
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Optional[Dict[str, Dict[str, float]]] = None
+    dots: Optional[List[Tuple[str, float, float]]] = None
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "collectives": self.collectives,
+            "dots": sorted(self.dots, key=lambda t: -t[1] * t[2])[:40],
+        }
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(1), instrs=[],
+                                  is_entry=line.strip().startswith("ENTRY"))
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rhs = dm.group(2)
+        om = _OP_RE.match(rhs)
+        if om is None:
+            # parameter/constant without parens form
+            parts = rhs.split()
+            op = parts[1].split("(")[0] if len(parts) > 1 else "unknown"
+            out_text = parts[0]
+        else:
+            out_text, op = om.group(1), om.group(2)
+        cur.instrs.append(Instr(name=dm.group(1), op=op,
+                                out_text=out_text, line=stripped))
+    return comps
+
+
+def _mark_fused(comps: Dict[str, Computation]):
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].is_fused = True
+
+
+def _trip_count(cond: Computation,
+                comps: Optional[Dict[str, "Computation"]] = None) -> float:
+    """Scan trip count from the loop condition.
+
+    jax scans lower to `counter < K`; XLA may wrap the compare in a kLoop
+    fusion, so the direction is searched in the condition computation AND
+    any computation it calls, while the bound constant typically sits in
+    the condition itself (take the max constant found)."""
+    consts = [int(m) for ins in cond.instrs
+              for m in re.findall(r"constant\((\d+)\)", ins.line)]
+    direction = None
+    stack = [cond]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for ins in c.instrs:
+            dm = re.search(r"direction=(LT|LE|GT|GE|EQ|NE)", ins.line)
+            if dm:
+                direction = dm.group(1)
+            if comps is not None:
+                cm = _CALLS_RE.search(ins.line)
+                if cm and cm.group(1) in comps:
+                    stack.append(comps[cm.group(1)])
+                    consts.extend(
+                        int(m) for i2 in comps[cm.group(1)].instrs
+                        for m in re.findall(r"constant\((\d+)\)", i2.line))
+    if not consts:
+        return 1.0
+    k = max(consts)
+    return float(k + 1) if direction == "LE" else float(k)
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_shapes = _shape_list(ins.out_text)
+    out_elems = sum(n for _, n in out_shapes)
+    lhs_m = re.search(r"dot\(%?([\w.\-]+),", ins.line)
+    contract = 1
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if lhs_m and cm and lhs_m.group(1) in shapes:
+        dims_text = shapes[lhs_m.group(1)]
+        sm = _SHAPE_RE.search(dims_text)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",")]
+            for ci in cm.group(1).split(","):
+                if ci:
+                    contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _fusion_bytes(ins: Instr, comps: Dict[str, Computation],
+                  shapes: Dict[str, str]) -> Optional[float]:
+    """Effective HBM traffic of a fusion, slice/alias-aware.
+
+    Scan bodies reference stacked (L, ...) parameter/carry buffers but
+    read only ONE slice per iteration (a dynamic-slice inside the fused
+    computation), and scan SAVES write one slice in place (a
+    dynamic-update-slice whose operand aliases the output).  Counting
+    those at full-buffer size would overcharge by the layer count.
+
+      operand used only via dynamic-slice  -> charged at slice size
+      DUS-aliased output                    -> charged at update size
+      everything else                       -> full size
+    """
+    m = _CALLS_RE.search(ins.line)
+    if not m or m.group(1) not in comps:
+        return None
+    body = comps[m.group(1)]
+    # fusion operand list (text between the first '(' and its close)
+    om = re.search(r"fusion\((.*?)\)[,)]", ins.line)
+    if om is None:
+        om = re.search(r"fusion\((.*)\)$", ins.line)
+    operand_refs = re.findall(r"%([\w.\-]+)", om.group(1)) if om else []
+    # body parameter order
+    param_of_index: Dict[int, str] = {}
+    for bi in body.instrs:
+        if bi.op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", bi.line)
+            if pm:
+                param_of_index[int(pm.group(1))] = bi.name
+    # transparent ops (converts inserted by CPU float-normalization,
+    # bitcasts, copies) are followed to the underlying parameter
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape", "broadcast")
+    alias: Dict[str, str] = {}
+    for bi in body.instrs:
+        if bi.op in _TRANSPARENT:
+            refs = re.findall(r"%([\w.\-]+)", bi.line)[1:]
+            if refs:
+                alias[bi.name] = refs[0]
+
+    def resolve(r: str) -> str:
+        seen = set()
+        while r in alias and r not in seen:
+            seen.add(r)
+            r = alias[r]
+        return r
+
+    # usage scan
+    sliced_as: Dict[str, float] = {}
+    non_slice_use: Dict[str, bool] = {}
+    dus_updates: List[float] = []
+    dus_targets: set = set()
+    for bi in body.instrs:
+        if bi.op in _TRANSPARENT:
+            continue
+        refs = [resolve(r) for r in re.findall(r"%([\w.\-]+)", bi.line)[1:]]
+        if bi.op == "dynamic-slice" and refs:
+            src = refs[0]
+            sliced_as[src] = sliced_as.get(src, 0.0) + _bytes_of(bi.out_text)
+            for r in refs[1:]:
+                non_slice_use[r] = True
+            continue
+        if bi.op == "dynamic-update-slice" and len(refs) >= 2:
+            dus_targets.add(refs[0])
+            if refs[1] in shapes:
+                dus_updates.append(_bytes_of(shapes[refs[1]]))
+            for r in refs[2:]:
+                non_slice_use[r] = True
+            continue
+        for r in refs:
+            non_slice_use[r] = True
+    total = 0.0
+    out_bytes = _bytes_of(ins.out_text)
+    aliased_out = False
+    for idx, ref in enumerate(operand_refs):
+        if ref not in shapes:
+            continue
+        pname = param_of_index.get(idx)
+        full = _bytes_of(shapes[ref])
+        if pname is not None and pname in dus_targets \
+                and full == out_bytes:
+            aliased_out = True           # in-place accumulator
+            continue
+        if pname is not None and pname in sliced_as \
+                and not non_slice_use.get(pname, False):
+            total += sliced_as[pname]    # only the slice is read
+        else:
+            total += full
+    total += sum(dus_updates) if aliased_out else out_bytes
+    return total
+
+
+def analyze(text: str) -> CostTotals:
+    comps = parse_module(text)
+    _mark_fused(comps)
+    # global def-site shape map (names are unique module-wide in dumps)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            shapes[ins.name] = ins.out_text
+    entry = None
+    for name, c in comps.items():
+        if c.is_entry:
+            entry = name
+    if entry is None:  # fallback: an uncalled computation
+        called: set = set()
+        for c in comps.values():
+            for ins in c.instrs:
+                for rx in (_CALLS_RE, _TO_APPLY_RE, _BODY_RE, _COND_RE):
+                    m = rx.search(ins.line)
+                    if m:
+                        called.add(m.group(1))
+        for name in comps:
+            if name not in called:
+                entry = name
+    totals = CostTotals(collectives={k: {"count": 0.0, "bytes": 0.0,
+                                         "max_group": 1.0}
+                                     for k in COLLECTIVES},
+                        dots=[])
+    seen_stack: set = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        comp = comps[name]
+        seen_stack.add(name)
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                f = _dot_flops(ins, shapes) * mult
+                totals.flops += f
+                totals.dots.append((ins.out_text.strip(),
+                                    _dot_flops(ins, shapes), mult))
+            elif op in ELEMENTWISE_FLOP_OPS:
+                totals.flops += sum(n for _, n in
+                                    _shape_list(ins.out_text)) * mult
+            base_op = op.replace("-start", "")
+            if base_op in COLLECTIVES:
+                nbytes = _bytes_of(ins.out_text)
+                g = 1
+                gm = _GROUPS_RE.search(ins.line)
+                if gm:
+                    g = len(gm.group(1).split(","))
+                else:
+                    gi = _GROUPS_IOTA_RE.search(ins.line)
+                    if gi:
+                        g = int(gi.group(2))
+                rec = totals.collectives[base_op]
+                rec["count"] += mult
+                rec["bytes"] += nbytes * mult
+                rec["max_group"] = max(rec["max_group"], float(g))
+            # Memory traffic: only buffer-materializing ops, in unfused
+            # computations.  Raw elementwise/convert chains are assumed to
+            # fuse into neighbours (as the TPU backend does — the CPU HLO
+            # leaves them unfused and f32-promoted, which would inflate
+            # the memory term ~20x; see DESIGN.md hardware-adaptation).
+            if not comp.is_fused and op in _BYTES_OPS:
+                nbytes = None
+                if op == "fusion":
+                    nbytes = _fusion_bytes(ins, comps, shapes)
+                if nbytes is None:
+                    nbytes = _bytes_of(ins.out_text)
+                    for ref in re.findall(r"%([\w.\-]+)", ins.line)[1:]:
+                        if ref in shapes:
+                            nbytes += _bytes_of(shapes[ref])
+                totals.bytes += nbytes * mult
+            # recurse
+            if op == "fusion" or op == "call":
+                m = _CALLS_RE.search(ins.line) or _TO_APPLY_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult)
+            elif op == "while":
+                bm = _BODY_RE.search(ins.line)
+                cm = _COND_RE.search(ins.line)
+                trips = _trip_count(comps[cm.group(1)], comps) if cm and \
+                    cm.group(1) in comps else 1.0
+                if bm:
+                    walk(bm.group(1), mult * trips)
+                if cm:
+                    walk(cm.group(1), mult * trips)
+            elif op == "conditional":
+                bm = _BRANCH_RE.search(ins.line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult)
+            elif op in ("reduce", "reduce-window", "scatter", "sort",
+                        "map", "select-and-scatter", "all-reduce"):
+                m = _TO_APPLY_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult)
+        seen_stack.discard(name)
+
+    if entry is not None:
+        walk(entry, 1.0)
+    return totals

@@ -1,0 +1,38 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape_name)`` returns (step_kind, batch_specs) where
+batch_specs are the kwargs of the corresponding step function:
+
+  train   : {"tokens"/"frames", "labels" [, "vision"]}
+  prefill : {"tokens"/"frames" [, "vision"]}
+  decode  : {"tokens" (B,1) [, "vision"]}, plus pos & cache built separately
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str):
+    seq, gbatch, kind = SHAPES[shape_name]
+    if kind == "decode":
+        # Vision embeddings were consumed at prefill; decode reads the
+        # cross-attn cache, so tokens are the only decode-step input.
+        return kind, {"tokens": SDS((gbatch, 1), jnp.int32)}, seq
+    specs = {}
+    if cfg.audio is not None:
+        specs["frames"] = SDS((gbatch, seq, cfg.audio.feat_dim), jnp.bfloat16)
+    else:
+        specs["tokens"] = SDS((gbatch, seq), jnp.int32)
+    if cfg.vision is not None:
+        specs["vision"] = SDS((gbatch, cfg.vision.seq_len,
+                               cfg.vision.embed_dim), jnp.bfloat16)
+    if kind == "train":
+        specs["labels"] = SDS((gbatch, seq), jnp.int32)
+    return kind, specs, seq

@@ -1,0 +1,57 @@
+"""Serving launcher: batched prefill + decode with KV/state caches.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch mamba2-1.3b --smoke --batch 4 --new-tokens 48
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import arch_names, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.models.serving import generate, throughput_report
+from repro.numerics.approx_ops import make_numerics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=arch_names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--adder", default="off")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only (no decode)")
+    if args.adder != "off":
+        cfg = cfg.with_approx(make_numerics(args.adder, "residual"))
+    if cfg.ssd is not None and args.smoke:
+        cfg = dataclasses.replace(
+            cfg, ssd=dataclasses.replace(cfg.ssd, chunk=8))
+    rng = jax.random.key(0)
+    params = T.init_params(rng, cfg)
+    batch = {"tokens": jax.random.randint(
+        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.vision is not None:
+        batch["vision"] = jax.random.normal(
+            rng, (args.batch, cfg.vision.seq_len, cfg.vision.embed_dim),
+            jnp.bfloat16)
+    t0 = time.time()
+    out = generate(params, cfg, batch, args.new_tokens,
+                   temperature=args.temperature)
+    print(f"{cfg.name}: {out.shape}; "
+          f"{throughput_report(args.new_tokens, time.time() - t0, args.batch)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-4b --smoke --steps 100 --adder haloc_axa
+
+Full-size configs are launched the same way on real hardware (the mesh is
+built from the available devices; this container's CPU runs smoke sizes).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import arch_names, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.numerics.approx_ops import make_numerics
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.elastic import make_elastic_mesh
+from repro.runtime.train_loop import TrainLoopConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=arch_names())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--adder", default="off",
+                    help="off | haloc_axa | loa | ... (residual numerics)")
+    ap.add_argument("--fast-emul", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.adder != "off":
+        cfg = cfg.with_approx(make_numerics(args.adder, "residual",
+                                            fast=args.fast_emul))
+    mesh = None
+    if args.model_parallel > 1 or len(jax.devices()) > 1:
+        mesh = make_elastic_mesh(args.model_parallel)
+    data = DataConfig(seq_len=args.seq, global_batch=args.batch)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                      total_steps=args.steps)
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           ckpt_every=max(20, args.steps // 4),
+                           ckpt_dir=args.ckpt_dir or None,
+                           log_every=max(1, args.steps // 20))
+    out = run(cfg, opt, data, loop, mesh=mesh)
+    h = out["history"]
+    print(f"\n{cfg.name}: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+          f"over {args.steps} steps; stragglers flagged: "
+          f"{len(out['stragglers'])}; failures recovered: {out['failures']}")
+
+
+if __name__ == "__main__":
+    main()

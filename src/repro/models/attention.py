@@ -1,0 +1,159 @@
+"""Self/cross-attention residual mixers with KV-cache support.
+
+Cache layouts (lockstep batched serving):
+  global attn : {"k","v": (B, S_ctx, Hkv, Dh) bf16, "pos": (S_ctx,) int32}
+  local  attn : ring buffer of size W (slot = pos % W), same fields
+  cross  attn : {"k","v": (B, Sv, Hkv, Dh)}  (static after prefill)
+
+`pos` stores the absolute position held by each slot, -1 = empty; masks are
+computed from these absolute positions (layers._mask_bias), which makes the
+ring buffer and the linear cache share one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import BlockSpec, ModelConfig
+
+
+def attn_init(key, cfg: ModelConfig, spec: BlockSpec):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["qn"] = L.norm_init(cfg.head_dim)
+        p["kn"] = L.norm_init(cfg.head_dim)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, spec: BlockSpec):
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(p["qn"], q, cfg.norm_eps)
+        k = L.rms_norm(p["kn"], k, cfg.norm_eps)
+    cos, sin = L.rope_tables(positions, cfg.head_dim, spec.rope_base)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_apply(p, cfg: ModelConfig, spec: BlockSpec, x, positions):
+    """Full-sequence self attention (training / scoring). positions: (S,)."""
+    q, k, v = _qkv(p, cfg, x, positions, spec)
+    out = L.attention_any(
+        q, k, v, positions, positions, causal=cfg.causal,
+        window=spec.window, kv_chunk=cfg.attn_kv_chunk)
+    b, s = x.shape[:2]
+    return L.dense(p["wo"], out.reshape(b, s, cfg.q_dim))
+
+
+def attn_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                    ctx_len: int, dtype=jnp.bfloat16):
+    size = min(ctx_len, spec.window) if spec.window > 0 else ctx_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def attn_prefill(p, cfg: ModelConfig, spec: BlockSpec, x, positions, cache):
+    """Prefill: full-sequence attention + populate the cache.
+
+    The cache covers the LAST `size` positions (ring layout for windowed
+    layers: slot = pos % size, which for a prefill of length S >= size is a
+    roll of the tail)."""
+    q, k, v = _qkv(p, cfg, x, positions, spec)
+    out = L.attention_any(
+        q, k, v, positions, positions, causal=cfg.causal,
+        window=spec.window, kv_chunk=cfg.attn_kv_chunk)
+    size = cache["k"].shape[1]
+    s = x.shape[1]
+    if s >= size:
+        tailpos = positions[s - size:]              # (size,)
+        slots = tailpos % size
+        inv = jnp.argsort(slots)                     # slot -> tail index
+        newk = jnp.take(k[:, s - size:], inv, axis=1).astype(cache["k"].dtype)
+        newv = jnp.take(v[:, s - size:], inv, axis=1).astype(cache["v"].dtype)
+        newpos = jnp.take(tailpos, inv)
+        cache = {"k": newk, "v": newv, "pos": newpos}
+    else:
+        slots = positions % size
+        cache = {
+            "k": cache["k"].at[:, slots].set(k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, slots].set(v.astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[slots].set(positions),
+        }
+    b = x.shape[0]
+    return L.dense(p["wo"], out.reshape(b, s, cfg.q_dim)), cache
+
+
+def attn_decode(p, cfg: ModelConfig, spec: BlockSpec, x, pos, cache):
+    """One decode step. x: (B,1,D); pos: scalar int32 (absolute position)."""
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _qkv(p, cfg, x, positions, spec)
+    size = cache["k"].shape[1]
+    slot = (positions[0] % size) if spec.window > 0 else positions[0]
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), slot, axis=0),
+    }
+    out = L.plain_attention(
+        q, cache["k"], cache["v"], positions, cache["pos"],
+        causal=cfg.causal, window=spec.window)
+    b = x.shape[0]
+    return L.dense(p["wo"], out.reshape(b, 1, cfg.q_dim)), cache
+
+
+# ----------------------------------------------------------- cross attn --
+
+def cross_attn_init(key, cfg: ModelConfig, spec: BlockSpec):
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model),
+        "kn": L.norm_init(cfg.head_dim),
+        "qn": L.norm_init(cfg.head_dim),
+        # Llama-3.2 gating: cross-attn output enters the residual stream
+        # through a learnable tanh gate (zero-init => identity at start).
+        "gate": jnp.zeros((), jnp.float32),
+    }
+
+
+def cross_kv(p, cfg: ModelConfig, vis):
+    """vis: projected vision embeddings (B, Sv, D)."""
+    b, sv, _ = vis.shape
+    k = L.dense(p["wk"], vis).reshape(b, sv, cfg.num_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], vis).reshape(b, sv, cfg.num_kv_heads, cfg.head_dim)
+    k = L.rms_norm(p["kn"], k, cfg.norm_eps)
+    return k, v
+
+
+def cross_attn_apply(p, cfg: ModelConfig, spec: BlockSpec, x, kv):
+    k, v = kv
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    q = L.rms_norm(p["qn"], q, cfg.norm_eps)
+    sv = k.shape[1]
+    qpos = jnp.zeros((s,), jnp.int32)
+    kvpos = jnp.zeros((sv,), jnp.int32)
+    out = L.plain_attention(q, k, v, qpos, kvpos, causal=False, window=0)
+    out = L.dense(p["wo"], out.reshape(b, s, cfg.q_dim))
+    return jnp.tanh(p["gate"]).astype(out.dtype) * out

@@ -1,0 +1,257 @@
+"""Mixture-of-Experts MLP (token-choice top-k, capacity-based, dropping).
+
+Dispatch is sort-based and gather-formulated (no (T,E,C) one-hot einsum):
+per batch row, tokens' (token, k-slot) pairs are ranked within their expert
+queue; the first C per expert are gathered into a dense (B, E, C, D)
+buffer.  Expert FFNs run as stacked einsums with E sharded over the
+"model"/expert-parallel mesh axis; GSPMD materializes the token
+redistribution as all-to-all/all-gather collectives (measured in §Roofline).
+
+Memory knob: the sequence is processed in `seq_chunks` sequential chunks
+(lax.scan), bounding the dispatch buffers for very wide expert counts
+(DeepSeek-V2: 160 experts).
+
+Decode (S == 1) merges the batch into a single dispatch group so expert
+capacity stays ~B*k/E instead of forcing one slot per (row, expert).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _pin(x, batch_axes, *rest):
+    """with_sharding_constraint helper (no-op outside a mesh context)."""
+    if batch_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(batch_axes, *rest))
+
+
+def moe_init(key, cfg: ModelConfig):
+    mc = cfg.moe
+    ks = jax.random.split(key, 5)
+    e, d, f = mc.num_experts, cfg.d_model, mc.d_ff
+
+    def stack(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * fan_in ** -0.5
+
+    p = {
+        "router": L.dense_init(ks[0], d, e),
+        "wi": stack(ks[1], (e, d, f), d),
+        "wg": stack(ks[2], (e, d, f), d),
+        "wo": stack(ks[3], (e, f, d), f),
+    }
+    if mc.num_shared_experts:
+        width = mc.shared_d_ff or mc.d_ff * mc.num_shared_experts
+        p["shared"] = L.swiglu_init(ks[4], d, width)
+    return p
+
+
+def _capacity(tokens: int, mc) -> int:
+    c = int(tokens * mc.experts_per_token * mc.capacity_factor
+            / mc.num_experts)
+    return max(4, -(-c // 4) * 4)  # >=4, multiple of 4
+
+
+def _dispatch_indices(ids, gates, num_experts: int, capacity: int):
+    """ids/gates: (B, T, k). Returns (src (B,E,C) token index or T=invalid,
+    combine info (dest slot per (B,T,k), keep mask))."""
+    b, t, k = ids.shape
+    flat = ids.reshape(b, t * k)
+    order = jnp.argsort(flat, axis=-1, stable=True)          # (B, Tk)
+    sorted_ids = jnp.take_along_axis(flat, order, axis=-1)
+    counts = jnp.sum(sorted_ids[:, :, None] ==
+                     jnp.arange(num_experts)[None, None, :], axis=1)
+    seg_start = jnp.cumsum(counts, axis=-1) - counts          # (B, E)
+    rank_sorted = (jnp.arange(t * k)[None, :]
+                   - jnp.take_along_axis(seg_start, sorted_ids, axis=-1))
+    # scatter ranks back to unsorted (token, k) order
+    rank = jnp.zeros((b, t * k), rank_sorted.dtype).at[
+        jnp.arange(b)[:, None], order].set(rank_sorted)
+    keep = rank < capacity
+    dest = jnp.where(keep, rank, capacity)                    # (B, Tk)
+    # src[b, e, c] = flat token index filling slot (e, c); sentinel = t
+    lin = flat * (capacity + 1) + dest                        # (B, Tk)
+    src = jnp.full((b, num_experts * (capacity + 1)), t * k, jnp.int32)
+    src = src.at[jnp.arange(b)[:, None], lin].set(
+        jnp.arange(t * k, dtype=jnp.int32)[None, :], mode="drop")
+    src = src.reshape(b, num_experts, capacity + 1)[:, :, :capacity]
+    src_tok = jnp.minimum(src // k, t)                        # token index
+    return src_tok, (src, dest, keep)
+
+
+def _expert_ffn(p, xin):
+    """xin: (B, E, C, D) -> (B, E, C, D), per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["wg"].astype(xin.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xin, p["wi"].astype(xin.dtype))
+    return jnp.einsum("becf,efd->becd", h, p["wo"].astype(xin.dtype))
+
+
+def _moe_chunk(p, cfg: ModelConfig, x, batch_axes=None):
+    """x: (B, T, D) one sequence chunk."""
+    mc = cfg.moe
+    b, t, d = x.shape
+    logits = L.dense(p["router"], x).astype(jnp.float32)      # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, mc.experts_per_token)   # (B,T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    cap = _capacity(t, mc)
+    src_tok, (src, dest, keep) = _dispatch_indices(
+        ids, gates, mc.num_experts, cap)
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xin = xpad[jnp.arange(b)[:, None, None], src_tok]         # (B,E,C,D)
+    # Keep the dispatch gather LOCAL to the batch shard (E replicated);
+    # the expert einsum then slices its E shard for free.  Without the
+    # pin GSPMD partial-gathers across batch shards and all-reduces the
+    # full (B,E,C,D) buffer (measured: 2.7 GB x layers, §Perf granite).
+    if mc.dispatch_pin:
+        xin = _pin(xin, batch_axes, None, None, None)
+    yout = _expert_ffn(p, xin)                                # (B,E,C,D)
+    if mc.dispatch_pin:
+        yout = _pin(yout, batch_axes, None, None, None)
+    # Combine: gather each (token, k) slot's result and weight by its gate.
+    # (A scatter-add combine over the E-sharded buffer was hypothesized to
+    # let GSPMD emit partial sums + one small all-reduce; MEASURED WORSE —
+    # GSPMD all-gathers both scatter operands, 2.5x the collective bytes.
+    # Hypothesis refuted; see EXPERIMENTS.md §Perf granite iteration 3.)
+    ybuf = yout.reshape(b, mc.num_experts * cap, d)
+    lin = ids.reshape(b, -1) * cap + jnp.minimum(dest, cap - 1)
+    gathered = jnp.take_along_axis(
+        ybuf, lin[:, :, None].astype(jnp.int32), axis=1)      # (B,Tk,D)
+    w = (gates.reshape(b, -1) * keep.astype(gates.dtype))[:, :, None]
+    out = (gathered.astype(jnp.float32) * w).reshape(
+        b, t, mc.experts_per_token, d).sum(axis=2).astype(x.dtype)
+    # router load-balancing auxiliary loss (Switch-style), returned for logs
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros_like(me).at[ids.reshape(-1)].add(
+        jnp.ones((b * t * mc.experts_per_token,), jnp.float32)
+    ) / (b * t * mc.experts_per_token)
+    aux = mc.num_experts * jnp.sum(me * ce)
+    return out, aux
+
+
+def moe_apply(p, cfg: ModelConfig, x, batch_axes=None):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    if s == 1:
+        out, aux = _moe_chunk(p, cfg, x.reshape(1, b, d))
+        out = out.reshape(b, 1, d)
+    elif mc.seq_chunks > 1 and s % mc.seq_chunks == 0:
+        t = s // mc.seq_chunks
+        xs = x.reshape(b, mc.seq_chunks, t, d).transpose(1, 0, 2, 3)
+
+        def body(_, xc):
+            o, a = _moe_chunk(p, cfg, xc, batch_axes)
+            return None, (o, a)
+
+        _, (outs, auxs) = jax.lax.scan(body, None, xs)
+        out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        aux = auxs.mean()
+    else:
+        out, aux = _moe_chunk(p, cfg, x, batch_axes)
+    if "shared" in p:
+        out = out + L.swiglu(p["shared"], x)
+    return out, aux
+
+
+# ----------------------------------------------------- shard_map dispatch --
+
+def moe_apply_shard_map(p, cfg: ModelConfig, x, batch_axes=None, mesh=None):
+    """Manual expert-parallel dispatch via shard_map (beyond-GSPMD path).
+
+    Observation (EXPERIMENTS.md §Perf): activations are replicated across
+    the "model" axis, so every model rank can gather ITS OWN experts'
+    (B, E_local, C, D) buffer with ZERO communication, run its expert FFNs
+    locally, combine partially (masking other ranks' gates), and finish
+    with ONE psum of the (B, T, D) output over "model" — instead of
+    GSPMD's all-reduce/all-gather of full dispatch buffers.
+
+    Falls back to moe_apply when no mesh/model axis is available, at
+    decode (S == 1), or when num_experts % model_size != 0.
+    """
+    from functools import partial as _partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mc = cfg.moe
+    b, s, d = x.shape
+    if (mesh is None or batch_axes is None
+            or "model" not in getattr(mesh, "axis_names", ())
+            or s == 1 or mc.num_experts % mesh.shape["model"] != 0):
+        return moe_apply(p, cfg, x, batch_axes)
+
+    e_local = mc.num_experts // mesh.shape["model"]
+    dtype = x.dtype
+    bspec = P(batch_axes, None, None)
+    espec = P("model", None, None)
+    rspec = P(None, None)
+
+    @_partial(shard_map, mesh=mesh,
+              in_specs=(bspec, rspec, espec, espec, espec),
+              out_specs=bspec)
+    def run(xl, router, wg, wi, wo):
+        bl, sl, _ = xl.shape
+        chunks = mc.seq_chunks if sl % max(1, mc.seq_chunks) == 0 else 1
+        t = sl // chunks
+        rank = jax.lax.axis_index("model")
+        lo = rank * e_local
+
+        def one_chunk(carry, xc):
+            logits = (xc @ router.astype(xc.dtype)).astype(jnp.float32)
+            probs = jax.nn.softmax(logits, axis=-1)
+            gates, ids = jax.lax.top_k(probs, mc.experts_per_token)
+            gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+            cap = _capacity(t, mc)
+            src_tok, (src, dest, keep) = _dispatch_indices(
+                ids, gates, mc.num_experts, cap)
+            # slice THIS rank's experts; all index math stays local
+            src_loc = jax.lax.dynamic_slice_in_dim(src_tok, lo, e_local, 1)
+            xpad = jnp.concatenate(
+                [xc, jnp.zeros((bl, 1, d), xc.dtype)], axis=1)
+            xin = xpad[jnp.arange(bl)[:, None, None], src_loc]
+            h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin,
+                                       wg.astype(xin.dtype)))
+            h = h * jnp.einsum("becd,edf->becf", xin, wi.astype(xin.dtype))
+            y = jnp.einsum("becf,efd->becd", h, wo.astype(xin.dtype))
+            # partial combine: only (token, k) slots routed to LOCAL experts
+            ybuf = y.reshape(bl, e_local * cap, d)
+            flat_ids = ids.reshape(bl, -1)
+            is_local = (flat_ids // e_local) == rank
+            lin = (flat_ids - lo) * cap + jnp.minimum(dest, cap - 1)
+            lin = jnp.clip(lin, 0, e_local * cap - 1)
+            gathered = jnp.take_along_axis(
+                ybuf, lin[:, :, None].astype(jnp.int32), axis=1)
+            w = (gates.reshape(bl, -1) * keep.astype(gates.dtype)
+                 * is_local.astype(gates.dtype))[:, :, None]
+            part = (gathered.astype(jnp.float32) * w).reshape(
+                bl, t, mc.experts_per_token, d).sum(axis=2)
+            return carry, part.astype(dtype)
+
+        if chunks > 1:
+            xs = xl.reshape(bl, chunks, t, d).transpose(1, 0, 2, 3)
+            _, parts = jax.lax.scan(one_chunk, None, xs)
+            part = parts.transpose(1, 0, 2, 3).reshape(bl, sl, d)
+        else:
+            _, part = one_chunk(None, xl)
+        return jax.lax.psum(part, "model")          # THE one collective
+
+    out = run(x, p["router"]["w"], p["wg"], p["wi"], p["wo"])
+    # router aux loss (cheap global recompute, for logging parity)
+    logits = L.dense(p["router"], x).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, mc.experts_per_token)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros_like(me).at[ids.reshape(-1)].add(
+        jnp.ones((b * s * mc.experts_per_token,), jnp.float32)
+    ) / (b * s * mc.experts_per_token)
+    aux = mc.num_experts * jnp.sum(me * ce)
+    if "shared" in p:
+        out = out + L.swiglu(p["shared"], x)
+    return out, aux

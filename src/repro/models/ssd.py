@@ -1,0 +1,193 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu, 2024): the sequence is split into chunks
+of length Q; within a chunk the dual quadratic form runs on the MXU, chunk
+boundary states are combined with a short scan.  All recurrences are in
+fp32; token mixing output is gated (silu(z)) and RMS-normed before the
+output projection.
+
+TPU-native sharding: SSD heads are independent, so the head axis is the
+tensor-parallel axis.  The input projections are kept SEPARATE (z, x, B/C,
+dt) instead of one fused matrix so that z/x/dt shard over heads while the
+group-shared B/C stay replicated — no mid-tensor split points that would
+force GSPMD gathers.
+
+State update:  h_t = a_t h_{t-1} + dt_t * (B_t (x) x_t),  a_t = exp(dt_t A)
+Output:        y_t = C_t . h_t + D * x_t
+
+Cache: {"state": (B,H,P,N) fp32, "conv_x": (B,cw-1,U), "conv_bc": (B,cw-1,2N)}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.rglru import causal_conv
+
+
+def _dims(cfg):
+    sc = cfg.ssd
+    assert sc.n_groups == 1, "group-shared B/C only (all assigned archs)"
+    heads = sc.d_inner // sc.head_dim
+    return sc, heads
+
+
+def ssd_init(key, cfg: ModelConfig, spec: BlockSpec):
+    sc, heads = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": L.dense_init(ks[0], d, sc.d_inner),
+        "in_x": L.dense_init(ks[1], d, sc.d_inner),
+        "in_bc": L.dense_init(ks[2], d, 2 * sc.d_state),
+        "in_dt": L.dense_init(ks[3], d, heads),
+        "conv_x": {"w": jax.random.normal(ks[4], (sc.conv_width, sc.d_inner),
+                                          jnp.float32) * sc.conv_width ** -0.5,
+                   "b": jnp.zeros((sc.d_inner,), jnp.float32)},
+        "conv_bc": {"w": jax.random.normal(ks[5], (sc.conv_width,
+                                                   2 * sc.d_state),
+                                           jnp.float32) * sc.conv_width ** -0.5,
+                    "b": jnp.zeros((2 * sc.d_state,), jnp.float32)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (heads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": L.norm_init(sc.d_inner),
+        "out_proj": L.dense_init(ks[7], sc.d_inner, d),
+    }
+
+
+def _project(p, cfg, x, conv_x_state=None, conv_bc_state=None):
+    """Returns z, xh (B,S,H,P), bh/ch (B,S,N), dt, log_decay, conv states."""
+    sc, heads = _dims(cfg)
+    z = L.dense(p["in_z"], x)
+    xin = L.dense(p["in_x"], x)
+    bc = L.dense(p["in_bc"], x)
+    dt_raw = L.dense(p["in_dt"], x)
+    xin, cxs = causal_conv(xin, p["conv_x"]["w"], p["conv_x"]["b"],
+                           state=conv_x_state)
+    bc, cbs = causal_conv(bc, p["conv_bc"]["w"], p["conv_bc"]["b"],
+                          state=conv_bc_state)
+    xin, bc = jax.nn.silu(xin), jax.nn.silu(bc)
+    bsz, s = xin.shape[:2]
+    xh = xin.reshape(bsz, s, heads, sc.head_dim)
+    bh, ch = jnp.split(bc, 2, axis=-1)              # (B,S,N) each
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    log_decay = dt * (-jnp.exp(p["a_log"]))         # (B,S,H)
+    return z, xh, bh, ch, dt, log_decay, cxs, cbs
+
+
+def _gated_out(p, cfg, y, z):
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(p["norm"], y, cfg.norm_eps)
+    return L.dense(p["out_proj"], y)
+
+
+def ssd_apply(p, cfg: ModelConfig, spec: BlockSpec, x, state0=None):
+    """x: (B,S,D). Returns (out, (state_last, conv_x_state, conv_bc_state))."""
+    sc, heads = _dims(cfg)
+    z, xh, bh, ch, dt, log_decay, cxs, cbs = _project(p, cfg, x)
+    bsz, s = xh.shape[:2]
+    q = min(sc.chunk, s)
+    if s % q:
+        # remainder handling: run the divisible head, then the tail as one
+        # short chunk, threading the boundary state through.
+        split = (s // q) * q
+        y1, h_mid = _ssd_core(p, cfg, xh[:, :split], bh[:, :split],
+                              ch[:, :split], dt[:, :split],
+                              log_decay[:, :split], q, state0)
+        y2, h_last = _ssd_core(p, cfg, xh[:, split:], bh[:, split:],
+                               ch[:, split:], dt[:, split:],
+                               log_decay[:, split:], s - split, h_mid)
+        y = jnp.concatenate([y1, y2], axis=1)
+    else:
+        y, h_last = _ssd_core(p, cfg, xh, bh, ch, dt, log_decay, q, state0)
+    y = y + xh * p["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(bsz, s, sc.d_inner)
+    return _gated_out(p, cfg, y, z), (h_last, cxs, cbs)
+
+
+def _ssd_core(p, cfg, xh, bh, ch, dt, log_decay, q, state0):
+    """Chunked SSD over a divisible segment. Returns (y (B,S,H,P), h_last)."""
+    sc, heads = _dims(cfg)
+    bsz, s = xh.shape[:2]
+    nc = s // q
+
+    def r(t, *shape):
+        return t.reshape(bsz, nc, q, *shape)
+
+    xq = r(xh, heads, sc.head_dim)
+    bq, cq = r(bh, sc.d_state), r(ch, sc.d_state)
+    dtq = r(dt, heads)
+    cum = jnp.cumsum(r(log_decay, heads), axis=2)   # (B,nc,Q,H)
+    # intra-chunk: att[q,k] = (C_q.B_k) exp(cum_q - cum_k) dt_k,  k <= q
+    cb = jnp.einsum("bcqn,bckn->bcqk", cq, bq)      # (B,nc,Q,K)
+    delta = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = cb[..., None] * jnp.exp(
+        jnp.where(mask[None, None, ..., None], delta, -jnp.inf))
+    att = att * dtq[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att.astype(xq.dtype), xq)
+    # chunk states: S_c = sum_k exp(cum_last - cum_k) dt_k  B_k (x) x_k
+    wk = jnp.exp(cum[:, :, -1:, :] - cum) * dtq     # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        bq, wk.astype(bq.dtype), xq)         # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # (B,nc,H)
+
+    def step(h, inp):
+        dec, s_c = inp
+        return dec[..., None, None] * h + s_c.astype(jnp.float32), h
+
+    h_init = (jnp.zeros((bsz, heads, sc.d_state, sc.head_dim), jnp.float32)
+              if state0 is None else state0)
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)      # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp",
+                         cq, h_prevs.astype(cq.dtype),
+                         jnp.exp(cum).astype(cq.dtype))
+    y = (y_intra + y_inter).reshape(bsz, s, heads, sc.head_dim)
+    return y, h_last
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    sc, heads = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, heads, sc.d_state, sc.head_dim),
+                           jnp.float32),
+        "conv_x": jnp.zeros((batch, sc.conv_width - 1, sc.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, sc.conv_width - 1, 2 * sc.d_state),
+                             dtype),
+    }
+
+
+def ssd_prefill(p, cfg, spec, x, cache):
+    out, (h_last, cxs, cbs) = ssd_apply(p, cfg, spec, x,
+                                        state0=cache["state"])
+    return out, {"state": h_last,
+                 "conv_x": cxs.astype(cache["conv_x"].dtype),
+                 "conv_bc": cbs.astype(cache["conv_bc"].dtype)}
+
+
+def ssd_decode(p, cfg: ModelConfig, spec: BlockSpec, x, cache):
+    """x: (B,1,D) single token."""
+    sc, heads = _dims(cfg)
+    z, xh, bh, ch, dt, log_decay, cxs, cbs = _project(
+        p, cfg, x, conv_x_state=cache["conv_x"].astype(x.dtype),
+        conv_bc_state=cache["conv_bc"].astype(x.dtype))
+    dec = jnp.exp(log_decay[:, 0])                  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bh[:, 0].astype(jnp.float32),
+                     dt[:, 0], xh[:, 0].astype(jnp.float32))
+    h = dec[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", ch[:, 0].astype(jnp.float32), h)
+    y = y.astype(x.dtype) + xh[:, 0] * p["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(x.shape[0], 1, sc.d_inner)
+    out = _gated_out(p, cfg, y, z)
+    return out, {"state": h,
+                 "conv_x": cxs.astype(cache["conv_x"].dtype),
+                 "conv_bc": cbs.astype(cache["conv_bc"].dtype)}

@@ -1,0 +1,344 @@
+"""Model assembly: embeddings/frontends, residual blocks, scan-over-layers.
+
+Layout of a parameter tree (all plain dicts; leaves fp32):
+
+  {"embed": {...}, "prefix": [block...], "pattern": [stacked block...],
+   "suffix": [block...], "final_norm": {...}, "lm_head": {...}}
+
+`pattern` holds one entry per pattern POSITION; each entry is a block tree
+whose leaves carry a leading `repeats` axis, consumed by `lax.scan`.
+
+The paper's technique enters through `cfg.approx`: when enabled, both
+residual-stream adds of every block run through the configured approximate
+adder in fixed point (numerics.approx_residual_add, STE gradients).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import mla as MLAm
+from repro.models import moe as MOEm
+from repro.models import rglru as RGm
+from repro.models import ssd as SSDm
+from repro.models.config import (
+    ATTN, CROSS, GELU, MLA, MOE, NONE, RGLRU, SSD, SWIGLU,
+    BlockSpec, ModelConfig,
+)
+from repro.numerics.approx_ops import approx_residual_add
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init --
+
+def block_init(key, cfg: ModelConfig, spec: BlockSpec) -> Params:
+    kmix, kmlp, _ = jax.random.split(key, 3)
+    p: Params = {"ln1": L.norm_init(cfg.d_model)}
+    if spec.mixer == ATTN:
+        p["mixer"] = ATT.attn_init(kmix, cfg, spec)
+    elif spec.mixer == CROSS:
+        p["mixer"] = ATT.cross_attn_init(kmix, cfg, spec)
+    elif spec.mixer == MLA:
+        p["mixer"] = MLAm.mla_init(kmix, cfg, spec)
+    elif spec.mixer == RGLRU:
+        p["mixer"] = RGm.rglru_init(kmix, cfg, spec)
+    elif spec.mixer == SSD:
+        p["mixer"] = SSDm.ssd_init(kmix, cfg, spec)
+    if spec.mlp != NONE:
+        p["ln2"] = L.norm_init(cfg.d_model)
+        if spec.mlp == SWIGLU:
+            p["mlp"] = L.swiglu_init(kmlp, cfg.d_model, cfg.d_ff)
+        elif spec.mlp == GELU:
+            p["mlp"] = L.gelu_mlp_init(kmlp, cfg.d_model, cfg.d_ff)
+        elif spec.mlp == MOE:
+            p["mlp"] = MOEm.moe_init(kmlp, cfg)
+    if spec.mixer == CROSS:
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    keys = jax.random.split(rng, 8)
+    p: Params = {}
+    d = cfg.d_model
+    if cfg.audio is not None:
+        p["frontend"] = L.dense_init(keys[0], cfg.audio.feat_dim, d, bias=True)
+    else:
+        p["embed"] = {"table": jax.random.normal(
+            keys[0], (cfg.padded_vocab, d), jnp.float32) * d ** -0.5}
+    if cfg.vision is not None:
+        p["vis_adapter"] = L.dense_init(keys[1], cfg.vision.embed_dim, d)
+    p["prefix"] = [block_init(k, cfg, s) for k, s in
+                   zip(jax.random.split(keys[2], max(1, len(cfg.prefix))),
+                       cfg.prefix)]
+    p["suffix"] = [block_init(k, cfg, s) for k, s in
+                   zip(jax.random.split(keys[3], max(1, len(cfg.suffix))),
+                       cfg.suffix)]
+    pattern = []
+    for i, s in enumerate(cfg.pattern):
+        ks = jax.random.split(jax.random.fold_in(keys[4], i), cfg.repeats)
+        pattern.append(jax.vmap(lambda k: block_init(k, cfg, s))(ks))
+    p["pattern"] = pattern
+    p["final_norm"] = L.norm_init(d)
+    p["lm_head"] = L.dense_init(keys[5], d, cfg.padded_vocab)
+    return p
+
+
+# --------------------------------------------------------------- caches --
+
+def block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     ctx_len: int, dtype=jnp.bfloat16) -> Params:
+    if spec.mixer == ATTN:
+        return ATT.attn_cache_init(cfg, spec, batch, ctx_len, dtype)
+    if spec.mixer == CROSS:
+        sv = cfg.vision.seq_len
+        shape = (batch, sv, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == MLA:
+        return MLAm.mla_cache_init(cfg, batch, ctx_len, dtype)
+    if spec.mixer == RGLRU:
+        return RGm.rglru_cache_init(cfg, batch, dtype)
+    if spec.mixer == SSD:
+        return SSDm.ssd_cache_init(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, ctx_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    c: Params = {
+        "prefix": [block_cache_init(cfg, s, batch, ctx_len, dtype)
+                   for s in cfg.prefix],
+        "suffix": [block_cache_init(cfg, s, batch, ctx_len, dtype)
+                   for s in cfg.suffix],
+    }
+    pattern = []
+    for s in cfg.pattern:
+        one = block_cache_init(cfg, s, batch, ctx_len, dtype)
+        pattern.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.repeats, *x.shape)), one))
+    c["pattern"] = pattern
+    return c
+
+
+# ---------------------------------------------------------------- blocks --
+
+def block_apply(p: Params, cfg: ModelConfig, spec: BlockSpec, x, ctx,
+                cache: Optional[Params], mode: str, batch_axes=None,
+                mesh=None):
+    """mode: 'full' | 'prefill' | 'decode'. Returns (x, new_cache, aux)."""
+    h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache = cache
+    if spec.mixer == ATTN:
+        if mode == "full":
+            mix = ATT.attn_apply(p["mixer"], cfg, spec, h, ctx["positions"])
+        elif mode == "prefill":
+            mix, new_cache = ATT.attn_prefill(
+                p["mixer"], cfg, spec, h, ctx["positions"], cache)
+        else:
+            mix, new_cache = ATT.attn_decode(
+                p["mixer"], cfg, spec, h, ctx["pos"], cache)
+    elif spec.mixer == CROSS:
+        if mode in ("full", "prefill"):
+            kv = ATT.cross_kv(p["mixer"], cfg, ctx["vis"])
+            if mode == "prefill":
+                new_cache = {"k": kv[0].astype(cache["k"].dtype),
+                             "v": kv[1].astype(cache["v"].dtype)}
+        else:
+            kv = (cache["k"].astype(h.dtype), cache["v"].astype(h.dtype))
+        mix = ATT.cross_attn_apply(p["mixer"], cfg, spec, h, kv)
+    elif spec.mixer == MLA:
+        if mode == "full":
+            mix = MLAm.mla_apply(p["mixer"], cfg, spec, h, ctx["positions"])
+        elif mode == "prefill":
+            mix, new_cache = MLAm.mla_prefill(
+                p["mixer"], cfg, spec, h, ctx["positions"], cache)
+        else:
+            mix, new_cache = MLAm.mla_decode(
+                p["mixer"], cfg, spec, h, ctx["pos"], cache)
+    elif spec.mixer == RGLRU:
+        if mode == "full":
+            mix, _ = RGm.rglru_apply(p["mixer"], cfg, spec, h)
+        elif mode == "prefill":
+            mix, new_cache = RGm.rglru_prefill(p["mixer"], cfg, spec, h, cache)
+        else:
+            mix, new_cache = RGm.rglru_decode(p["mixer"], cfg, spec, h, cache)
+    elif spec.mixer == SSD:
+        if mode == "full":
+            mix, _ = SSDm.ssd_apply(p["mixer"], cfg, spec, h)
+        elif mode == "prefill":
+            mix, new_cache = SSDm.ssd_prefill(p["mixer"], cfg, spec, h, cache)
+        else:
+            mix, new_cache = SSDm.ssd_decode(p["mixer"], cfg, spec, h, cache)
+    else:
+        raise ValueError(spec.mixer)
+
+    x = approx_residual_add(x, mix.astype(x.dtype), cfg.approx)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp != NONE:
+        h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+        if spec.mlp == MOE:
+            if cfg.moe.use_shard_map and mode != "decode":
+                out, aux = MOEm.moe_apply_shard_map(
+                    p["mlp"], cfg, h2, batch_axes=batch_axes, mesh=mesh)
+            else:
+                out, aux = MOEm.moe_apply(p["mlp"], cfg, h2,
+                                          batch_axes=batch_axes)
+        elif spec.mlp == SWIGLU:
+            out = L.swiglu(p["mlp"], h2)
+        else:
+            out = L.gelu_mlp(p["mlp"], h2)
+        if spec.mixer == CROSS:
+            out = jnp.tanh(p["gate_mlp"]).astype(out.dtype) * out
+        x = approx_residual_add(x, out.astype(x.dtype), cfg.approx)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------- forward --
+
+def _shard_act(x, batch_axes, seq_shard=False):
+    if batch_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    rest = [None] * (x.ndim - 1)
+    if seq_shard and x.ndim >= 3:
+        rest[0] = "model"  # sequence dim over TP (Megatron-SP region)
+    spec = P(batch_axes, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def embed_input(params, cfg: ModelConfig, batch, compute_dtype=jnp.bfloat16,
+                need_vision=True):
+    """batch: {"tokens": (B,S) i32} or {"frames": (B,S,feat)} (+"vision")."""
+    if cfg.audio is not None:
+        x = L.dense(params["frontend"], batch["frames"].astype(compute_dtype))
+    else:
+        x = params["embed"]["table"].astype(compute_dtype)[batch["tokens"]]
+    ctx = {}
+    if cfg.vision is not None and need_vision:
+        ctx["vis"] = L.dense(params["vis_adapter"],
+                             batch["vision"].astype(compute_dtype))
+    return x, ctx
+
+
+def forward(params, cfg: ModelConfig, batch, *, mode: str = "full",
+            cache: Optional[Params] = None, pos=None, batch_axes=None,
+            mesh=None, return_prelogits: bool = False):
+    """Returns (logits, new_cache, aux_sum)."""
+    x, ctx = embed_input(params, cfg, batch, need_vision=(mode != "decode"))
+    b, s = x.shape[:2]
+    if mode == "decode":
+        ctx["pos"] = pos
+        ctx["positions"] = pos[None]
+    else:
+        ctx["positions"] = jnp.arange(s, dtype=jnp.int32)
+    # SP applies to full-sequence passes (training AND prefill); decode
+    # steps have seq length 1.
+    ss = cfg.seq_shard and mode in ("full", "prefill")
+    x = _shard_act(x, batch_axes, ss)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    empty = {"prefix": [None] * len(cfg.prefix),
+             "suffix": [None] * len(cfg.suffix),
+             "pattern": [None] * len(cfg.pattern)}
+    cache_in = cache if cache is not None else empty
+    cache_out = {"prefix": [], "suffix": [], "pattern": []}
+
+    def apply_one(p, spec, x, c):
+        if cfg.remat == "block" and mode == "full":
+            fn = jax.checkpoint(
+                functools.partial(block_apply, cfg=cfg, spec=spec, mode=mode,
+                                  batch_axes=batch_axes, mesh=mesh))
+            return fn(p, x=x, ctx=ctx, cache=c)
+        return block_apply(p, cfg, spec, x, ctx, c, mode,
+                           batch_axes=batch_axes, mesh=mesh)
+
+    for p, spec, c in zip(params["prefix"], cfg.prefix, cache_in["prefix"]):
+        x, nc, aux = apply_one(p, spec, x, c)
+        x = _shard_act(x, batch_axes, ss)
+        cache_out["prefix"].append(nc)
+        aux_total += aux
+
+    if cfg.repeats > 0 and cfg.pattern:
+        def body(carry, xs):
+            x, aux_acc = carry
+            pslices, cslices = xs
+            ys = []
+            for i, spec in enumerate(cfg.pattern):
+                c = None if cslices is None else cslices[i]
+                x, nc, aux = block_apply(p=pslices[i], cfg=cfg, spec=spec,
+                                         x=x, ctx=ctx, cache=c, mode=mode,
+                                         batch_axes=batch_axes, mesh=mesh)
+                x = _shard_act(x, batch_axes, ss)
+                aux_acc = aux_acc + aux
+                ys.append(nc)
+            return (x, aux_acc), (tuple(ys) if cache is not None else 0)
+
+        if cfg.remat == "block" and mode == "full":
+            body = jax.checkpoint(body)
+        cslices = tuple(cache_in["pattern"]) if cache is not None else None
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total),
+            (tuple(params["pattern"]), cslices) if cache is not None
+            else (tuple(params["pattern"]), None))
+        if cache is not None:
+            cache_out["pattern"] = list(ys)
+
+    for p, spec, c in zip(params["suffix"], cfg.suffix, cache_in["suffix"]):
+        x, nc, aux = apply_one(p, spec, x, c)
+        x = _shard_act(x, batch_axes, ss)
+        cache_out["suffix"].append(nc)
+        aux_total += aux
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if mode in ("prefill", "decode") and cfg.causal:
+        x = x[:, -1:]  # only the last position's logits are needed
+    if return_prelogits:
+        return x, (cache_out if cache is not None else None), aux_total
+    logits = L.dense(params["lm_head"], x)
+    return logits, (cache_out if cache is not None else None), aux_total
+
+
+# ------------------------------------------------------------------ loss --
+
+def softmax_cross_entropy(logits, labels):
+    """Shard-friendly CE: the gold logit is extracted with an iota compare
+    + masked sum (partitionable along a model-sharded vocab axis), never
+    with take_along_axis (which would all-gather the full logits)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    return logz - gold
+
+
+def loss_fn(params, cfg: ModelConfig, batch, batch_axes=None, mesh=None):
+    x, _, aux = forward(params, cfg, batch, mode="full",
+                        batch_axes=batch_axes, mesh=mesh,
+                        return_prelogits=True)
+
+    # Head + CE under remat: the (B, S, V) logits (and the fp32 softmax
+    # internals) are recomputed during backward instead of being saved.
+    @jax.checkpoint
+    def head_loss(w, x, labels):
+        logits = L.dense(w, x)
+        if cfg.padded_vocab != cfg.vocab_size:
+            # mask padded vocab slots to -inf (exact CE over the true vocab)
+            viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                             logits.ndim - 1)
+            logits = jnp.where(viota < cfg.vocab_size, logits,
+                               jnp.asarray(L.NEG_INF, logits.dtype))
+        return softmax_cross_entropy(logits, labels).mean()
+
+    ce = head_loss(params["lm_head"], x, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}

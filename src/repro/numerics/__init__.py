@@ -1,0 +1,13 @@
+from repro.numerics.fixed_point import (  # noqa: F401
+    FixedPointFormat,
+    dequantize,
+    quantize,
+    signed_to_container,
+    container_to_signed,
+)
+from repro.numerics.approx_ops import (  # noqa: F401
+    ApproxNumericsConfig,
+    approx_add_signed,
+    approx_residual_add,
+    approx_sum,
+)

@@ -1,0 +1,160 @@
+"""Approximate arithmetic ops built on the paper's adders.
+
+These are the integration points the rest of the framework uses:
+
+- :func:`approx_add_signed` — two's-complement fixed-point add through a
+  configured approximate adder (bit-exact emulation).
+- :func:`approx_residual_add` — float-in/float-out residual-stream add:
+  quantize -> approximate add -> dequantize, with a straight-through
+  estimator so the op is trainable (gradient of an exact add).
+- :func:`approx_sum` — tree reduction with approximate partial sums (the
+  accumulation pattern a MAC ASIC built from these adders would exhibit).
+
+``ApproxNumericsConfig`` is the user-facing knob carried by every model
+config (``--approx-adder haloc_axa --approx-where residual``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adders import approx_add_mod
+from repro.core.specs import ACCURATE, AdderSpec
+from repro.numerics.fixed_point import (
+    FixedPointFormat,
+    container_to_signed,
+    dequantize,
+    quantize,
+    signed_to_container,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxNumericsConfig:
+    """How the paper's adder is deployed inside a model.
+
+    where: "off" | "residual" (residual-stream adds) | "residual+logits".
+    fmt:   fixed-point format of the approximate dataflow.
+    spec:  the adder (paper default: HALOC-AxA at a 16-bit datapath uses
+           m=8, k=4 — the paper's own Fig-4 scaling of N=32,m=10,k=5).
+    """
+
+    spec: AdderSpec = AdderSpec(kind=ACCURATE)
+    fmt: FixedPointFormat = FixedPointFormat(16, 8)
+    where: str = "off"
+    # algebraically-fused emulation (bit-identical; fewer vector ops) —
+    # OFF for the paper-faithful baseline, flipped in §Perf iterations.
+    fast: bool = False
+
+    def __post_init__(self):
+        if self.where not in ("off", "residual", "residual+logits"):
+            raise ValueError(f"bad approx 'where': {self.where!r}")
+        if self.spec.kind != ACCURATE and self.spec.n_bits != self.fmt.n_bits:
+            raise ValueError(
+                f"adder width N={self.spec.n_bits} must match fixed-point "
+                f"container n_bits={self.fmt.n_bits}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.where != "off" and self.spec.kind != ACCURATE
+
+
+def approx_add_signed(qx, qy, spec: AdderSpec, fmt: FixedPointFormat,
+                      fast: bool = False):
+    """Two's-complement fixed-point add via the approximate adder.
+
+    Inputs/outputs are signed int32 containers holding Q-format values.
+    Overflow wraps modulo 2^N — exactly like the hardware adder.
+    """
+    a = signed_to_container(qx, fmt)
+    b = signed_to_container(qy, fmt)
+    s = approx_add_mod(a, b, spec, fast=fast)
+    return container_to_signed(s, fmt)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _ste_residual_add(x, y, spec: AdderSpec, fmt: FixedPointFormat,
+                      fast: bool = False):
+    qx, qy = quantize(x, fmt), quantize(y, fmt)
+    return dequantize(approx_add_signed(qx, qy, spec, fmt, fast=fast),
+                      fmt, x.dtype)
+
+
+def _ste_fwd(x, y, spec, fmt, fast):
+    return _ste_residual_add(x, y, spec, fmt, fast), None
+
+
+def _ste_bwd(spec, fmt, fast, _res, g):
+    # Straight-through: d(approx_add)/dx ~= d(x+y)/dx = 1.
+    return g, g
+
+
+_ste_residual_add.defvjp(_ste_fwd, _ste_bwd)
+
+
+def approx_residual_add(x, y, cfg: ApproxNumericsConfig):
+    """Residual-stream add; exact float add when the config is off."""
+    if not cfg.enabled:
+        return x + y
+    return _ste_residual_add(x, y, cfg.spec, cfg.fmt, cfg.fast)
+
+
+def approx_sum(q, spec: AdderSpec, fmt: FixedPointFormat, axis: int = -1):
+    """Tree reduction of signed fixed-point values with approximate adds.
+
+    Models the accumulator of an AxA MAC array: partial sums are combined
+    pairwise through the approximate adder (log-depth tree, matching a
+    reduction-tree ASIC rather than a serial chain).
+    """
+    q = jnp.moveaxis(q, axis, -1)
+    n = q.shape[-1]
+    # Pad to a power of two with zeros (0 is the additive identity of every
+    # adder in the family up to the constant-1 tail, handled below).
+    pow2 = 1 << (n - 1).bit_length()
+    if pow2 != n:
+        pad = [(0, 0)] * (q.ndim - 1) + [(0, pow2 - n)]
+        q = jnp.pad(q, pad)
+    while q.shape[-1] > 1:
+        half = q.shape[-1] // 2
+        q = approx_add_signed(q[..., :half], q[..., half:], spec, fmt)
+    return q[..., 0]
+
+
+def effective_lsb_bias(spec: AdderSpec) -> float:
+    """Expected bias contributed by the constant-1 section (analysis aid).
+
+    For OLOCA/M-HERLOA/HALOC-AxA the low k sum bits read 1 regardless of
+    the operands, so E[S_low - (A+B)_low] = (2^k - 1) - 2 * (2^k - 1)/2 = 0
+    in expectation for uniform operands, but the worst case is +/-(2^k - 1).
+    Exposed for the numerics documentation/tests.
+    """
+    k = spec.effective_const_bits
+    return float((1 << k) - 1) / 2.0 if k else 0.0
+
+
+def make_numerics(adder: str = "accurate", where: str = "off",
+                  n_bits: int = 16, frac_bits: int = 8,
+                  lsm_bits: Optional[int] = None,
+                  const_bits: Optional[int] = None,
+                  fast: bool = False) -> ApproxNumericsConfig:
+    """Convenience constructor used by model configs / CLI flags.
+
+    Defaults scale the paper's 32-bit (m=10, k=5) partition to the 16-bit
+    activation datapath: m=8, k=4 (the paper's own Fig-4 example uses
+    exactly this N=16/m=8/k=4 split).
+    """
+    if adder == ACCURATE or where == "off":
+        return ApproxNumericsConfig(where="off")
+    m = lsm_bits if lsm_bits is not None else max(2, n_bits // 2)
+    k = const_bits if const_bits is not None else m // 2
+    spec = AdderSpec(kind=adder, n_bits=n_bits, lsm_bits=m, const_bits=k
+                     if adder in ("oloca", "m_herloa", "haloc_axa") else 0)
+    return ApproxNumericsConfig(
+        spec=spec, fmt=FixedPointFormat(n_bits, frac_bits), where=where,
+        fast=fast)

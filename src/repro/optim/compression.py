@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+tricks for the 1000+-node posture).
+
+- top-k sparsification WITH error feedback (memory): the standard Deep
+  Gradient Compression recipe — the residual of the sparsifier is carried
+  into the next step so the compressed optimizer still converges.
+- int8 stochastic quantization (per-tensor scale) emulating a quantized
+  all-reduce: values are quantized, summed in int32, dequantized.  On a
+  real multi-pod deployment this halves/quarters DCI traffic; here the
+  numerics (and convergence behaviour, tested) are what we implement.
+
+Both are pure-jax transforms plugged into train_step via grad_transform.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"           # none | topk_ef | int8
+    topk_ratio: float = 0.01     # fraction of entries kept (topk_ef)
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def topk_sparsify_with_ef(grads, ef, ratio: float) -> Tuple[Any, Any]:
+    """Returns (compressed grads, new error feedback)."""
+
+    def one(g, e):
+        g = g + e                                   # apply carried residual
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * ratio))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(flat) >= thresh).astype(g.dtype)
+        kept = (flat * mask).reshape(g.shape)
+        return kept, g - kept                        # new residual
+
+    out = jax.tree.map(one, grads, ef)
+    kept = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return kept, new_ef
+
+
+def int8_quantize_dequantize(grads, seed: int = 0):
+    """Emulated int8 all-reduce: stochastic-round to int8 per tensor."""
+
+    def one(path, g):
+        key = jax.random.fold_in(jax.random.key(seed),
+                                 hash(jax.tree_util.keystr(path)) % (2**31))
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        scaled = g / scale
+        noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+        q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+        return q.astype(g.dtype) * scale
+
+    return jax.tree_util.tree_map_with_path(one, grads)
+
+
+def make_grad_transform(cfg: CompressionConfig, ef_state=None):
+    """Returns (transform(grads) -> grads, uses_ef flag).  For topk_ef the
+    caller threads the EF pytree through the train state."""
+    if cfg.kind == "none":
+        return None
+    if cfg.kind == "int8":
+        return lambda g: int8_quantize_dequantize(g)
+    raise ValueError(f"use topk_sparsify_with_ef directly for {cfg.kind}")

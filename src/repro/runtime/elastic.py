@@ -1,0 +1,57 @@
+"""Elastic scaling: rebuild the mesh from the currently-available devices
+and reshard a checkpointed state onto it.
+
+At 1000+-node scale jobs lose/gain slices; the recovery path is:
+  1. detect the healthy device set,
+  2. choose the largest (data, model) factorization that preserves the
+     model-parallel degree (TP degree is a property of the lowered
+     program; DP degree is free),
+  3. reshard the restored state (Checkpointer.restore already device_puts
+     onto arbitrary shardings — resharding is a restore with the new
+     mesh's shardings).
+
+Tested by reshaping a small host mesh (tests/test_runtime.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int,
+                      pod_size: Optional[int] = None):
+    """Largest usable (pod, data, model) given surviving devices."""
+    if n_devices < model_parallel:
+        raise ValueError("fewer devices than the model-parallel degree")
+    usable_dp = n_devices // model_parallel
+    if pod_size and pod_size // model_parallel > 0:
+        dp_per_pod = pod_size // model_parallel
+        pods = max(1, usable_dp // dp_per_pod)
+        if pods > 1:
+            return (pods, dp_per_pod, model_parallel)
+    return (usable_dp, model_parallel)
+
+
+def make_elastic_mesh(model_parallel: int,
+                      devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape = choose_mesh_shape(len(devices), model_parallel)
+    used = 1
+    for s in shape:
+        used *= s
+    axes = (("pod", "data", "model") if len(shape) == 3
+            else ("data", "model"))
+    import numpy as np
+    arr = np.array(devices[:used]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def reshard_state(state, new_mesh: Mesh):
+    """Reshard a live state pytree onto a new mesh (survivor restart)."""
+    from repro.sharding import rules as R
+    shapes = jax.eval_shape(lambda s: s, state)
+    shardings = R.state_shardings(shapes, new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

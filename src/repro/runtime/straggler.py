@@ -1,0 +1,44 @@
+"""Straggler detection: robust per-step wall-time outlier monitor.
+
+At fleet scale the common mitigation stack is (a) detect the slow worker,
+(b) alert/evict, (c) keep the optimizer state intact via elastic restart.
+This module implements (a) host-side with a median/MAD filter and exposes
+a callback hook for (b); (c) is runtime/elastic.py + checkpoint restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 32           # trailing steps for the baseline
+    threshold: float = 3.0     # flag if dt > median + threshold * MAD
+    min_samples: int = 8
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_flag: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.on_flag = on_flag
+        self.times: List[float] = []
+        self.flagged: List[Tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        window = self.times[-self.cfg.window:]
+        self.times.append(dt)
+        if len(window) < self.cfg.min_samples:
+            return False
+        srt = sorted(window)
+        med = srt[len(srt) // 2]
+        mad = sorted(abs(t - med) for t in window)[len(window) // 2]
+        limit = med + self.cfg.threshold * max(mad, 0.05 * med, 1e-9)
+        if dt > limit:
+            self.flagged.append((step, dt))
+            if self.on_flag is not None:
+                self.on_flag(step, dt)
+            return True
+        return False

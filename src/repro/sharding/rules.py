@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules (MaxText-style) with a divisibility-aware
+resolver.
+
+Parameters/caches are matched by PATH SUFFIX (the trailing dict keys of the
+pytree path, list indices ignored), and each rule assigns LOGICAL axes to
+the TRAILING dims of the leaf — so the same rule covers a plain block and
+its scan-stacked (leading `repeats` axis) version.
+
+Logical -> physical mesh axes:
+    batch   -> ("pod", "data")   activations' batch dim
+    fsdp    -> ("data",)         weights' d_model dim (FSDP within a pod)
+    tp      -> ("model",)        heads / ff / experts / vocab / ssm width
+
+The resolver drops a mesh axis when it does not divide the dim (e.g.
+qwen1.5-4b's 20 heads on model=16, granite's 49155 vocab) and never assigns
+the same mesh axis twice in one spec.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+FSDP = "fsdp"
+TP = "tp"
+BATCH = "batch"
+
+MESH_AXES = {
+    BATCH: ("pod", "data"),
+    FSDP: ("data",),
+    TP: ("model",),
+}
+
+# (path-suffix, logical axes for trailing dims). First match wins; rules
+# are checked in order, longest suffixes first.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / heads
+    ("embed.table", (TP, FSDP)),            # (V, D)
+    ("lm_head.w", (FSDP, TP)),              # (D, V)
+    ("vis_adapter.w", (None, FSDP)),
+    ("frontend.w", (None, FSDP)),
+    # attention
+    ("mixer.wq.w", (FSDP, TP)),
+    ("mixer.wk.w", (FSDP, TP)),
+    ("mixer.wv.w", (FSDP, TP)),
+    ("mixer.wq.b", (TP,)),
+    ("mixer.wk.b", (TP,)),
+    ("mixer.wv.b", (TP,)),
+    ("mixer.wo.w", (TP, FSDP)),             # also MLA wo
+    # MLA
+    ("mixer.wq_a.w", (FSDP, None)),
+    ("mixer.wq_b.w", (None, TP)),
+    ("mixer.wkv_a.w", (FSDP, None)),
+    ("mixer.wkv_b.w", (None, TP)),
+    # MoE (E, D, F) / (E, F, D); router (D, E)
+    ("mlp.router.w", (FSDP, None)),
+    ("mlp.wi", (TP, FSDP, None)),
+    ("mlp.wg", (TP, FSDP, None)),
+    ("mlp.wo", (TP, None, FSDP)),
+    # dense MLPs (covers moe "shared" too via wi.w/wg.w/wo.w)
+    ("wi.w", (FSDP, TP)),
+    ("wg.w", (FSDP, TP)),
+    ("wo.w", (TP, FSDP)),
+    ("wi.b", (TP,)),
+    ("wo.b", (None,)),
+    # RG-LRU
+    ("mixer.proj_x.w", (FSDP, TP)),
+    ("mixer.proj_gate.w", (FSDP, TP)),
+    ("mixer.proj_out.w", (TP, FSDP)),
+    ("mixer.conv_w", (None, TP)),
+    ("mixer.conv_b", (TP,)),
+    ("mixer.wa.w", (TP, None, None)),       # block-diagonal (nb, bd, bd)
+    ("mixer.wa.b", (TP, None)),
+    ("mixer.wi.w", (TP, None, None)),
+    ("mixer.wi.b", (TP, None)),
+    ("mixer.lam", (TP,)),
+    # SSD
+    ("mixer.in_z.w", (FSDP, TP)),
+    ("mixer.in_x.w", (FSDP, TP)),
+    ("mixer.in_bc.w", (FSDP, None)),
+    ("mixer.in_dt.w", (FSDP, TP)),
+    ("mixer.in_dt.b", (TP,)),
+    ("mixer.conv_x.w", (None, TP)),
+    ("mixer.conv_x.b", (TP,)),
+    ("mixer.conv_bc.w", (None, None)),
+    ("mixer.a_log", (TP,)),
+    ("mixer.d_skip", (TP,)),
+    ("mixer.dt_bias", (TP,)),
+    ("mixer.norm.scale", (TP,)),
+    ("mixer.out_proj.w", (TP, FSDP)),
+)
+
+CACHE_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("k", (BATCH, None, TP, None)),
+    ("v", (BATCH, None, TP, None)),
+    ("pos", (None,)),
+    ("ckv", (BATCH, None, None)),
+    ("krope", (BATCH, None, None)),
+    ("h", (BATCH, TP)),
+    ("conv", (BATCH, None, TP)),
+    ("conv_x", (BATCH, None, TP)),
+    ("conv_bc", (BATCH, None, None)),
+    ("state", (BATCH, TP, None, None)),
+)
+
+
+def path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            continue
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _match(names: Sequence[str], rules):
+    joined = ".".join(names)
+    best = None
+    for suffix, logical in rules:
+        if joined == suffix or joined.endswith("." + suffix):
+            if best is None or len(suffix) > len(best[0]):
+                best = (suffix, logical)
+    return None if best is None else best[1]
+
+
+def resolve_spec(shape: Tuple[int, ...], logical: Sequence[Optional[str]],
+                 mesh: Mesh) -> P:
+    """Map trailing-dim logical axes onto the mesh, checking divisibility."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    used: set = set()
+    offset = ndim - len(logical)
+    if offset < 0:  # leaf has fewer dims than the rule: align trailing
+        logical = logical[-ndim:]
+        offset = 0
+    for i, name in enumerate(logical):
+        if name is None:
+            continue
+        dim = offset + i
+        axes = [a for a in MESH_AXES[name]
+                if a in mesh.axis_names and a not in used]
+        good: list = []
+        size = 1
+        for a in axes:
+            if shape[dim] % (size * mesh.shape[a]) == 0:
+                good.append(a)
+                size *= mesh.shape[a]
+        if good:
+            used.update(good)
+            spec[dim] = tuple(good) if len(good) > 1 else good[0]
+    return P(*spec)
+
+
+def tree_shardings(tree, mesh: Mesh, rules):
+    """NamedSharding tree for a pytree of arrays/ShapeDtypeStructs."""
+
+    def one(path, leaf):
+        names = path_names(path)
+        logical = _match(names, rules)
+        if logical is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, resolve_spec(leaf.shape, logical, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def data_sharding(tree, mesh: Mesh):
+    """Inputs: first dim = batch, everything else replicated; scalars rep."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) == 0 or ba is None:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] % _prod(mesh.shape[a] for a in ba) == 0:
+            return NamedSharding(mesh, P(ba, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, tree)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def state_shardings(state_shapes, mesh: Mesh):
+    """Shardings for {"params":..., "opt": {"m","v"}, "step"} trees."""
+
+    def for_subtree(tree):
+        return tree_shardings(tree, mesh, PARAM_RULES)
+
+    out = {"params": for_subtree(state_shapes["params"])}
+    if "opt" in state_shapes:
+        # m/v mirror the param shardings exactly
+        out["opt"] = {
+            "m": for_subtree(state_shapes["opt"]["m"]),
+            "v": for_subtree(state_shapes["opt"]["v"]),
+            "count": NamedSharding(mesh, P()),
+        }
+    if "step" in state_shapes:
+        out["step"] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    return tree_shardings(cache_shapes, mesh, CACHE_RULES)

@@ -1,0 +1,282 @@
+"""Paper-faithfulness tests for the approximate adder family.
+
+Covers: Fig 3 (2-MSB truth table), Fig 4 (worked-example invariants),
+exhaustive small-N semantics, numpy/jax bit-identity, and property tests
+(hypothesis) for the adder-family invariants.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    ACCURATE,
+    ALL_KINDS,
+    HALOC_AXA,
+    HERLOA,
+    LOA,
+    LOAWA,
+    M_HERLOA,
+    OLOCA,
+    AdderSpec,
+    approx_add,
+    approx_add_mod,
+    lsm_error_bound,
+    paper_spec,
+)
+
+U = np.uint64
+
+# ---------------------------------------------------------------- Fig 3 ---
+
+FIG3_COMBOS = [
+    (0b00, 0b00), (0b01, 0b00), (0b01, 0b01), (0b10, 0b00), (0b10, 0b01),
+    (0b10, 0b10), (0b11, 0b00), (0b11, 0b01), (0b11, 0b10), (0b11, 0b11),
+]
+# Rows exactly as printed in the paper's Fig 3 (the two OCR-garbled HERLOA
+# cells for 11+01 / 11+10 are restored from the paper's own prose: HERLOA
+# errs ONLY when A[m-2]=B[m-2]=1 and A[m-1]!=B[m-1], producing 011).
+FIG3_EXPECT = {
+    ACCURATE:  [0b000, 0b001, 0b010, 0b010, 0b011, 0b100, 0b011, 0b100, 0b101, 0b110],
+    LOA:       [0b000, 0b001, 0b001, 0b010, 0b011, 0b110, 0b011, 0b011, 0b111, 0b111],
+    HERLOA:    [0b000, 0b001, 0b010, 0b010, 0b011, 0b100, 0b011, 0b011, 0b101, 0b110],
+    HALOC_AXA: [0b000, 0b001, 0b010, 0b010, 0b011, 0b100, 0b011, 0b010, 0b101, 0b110],
+}
+
+
+@pytest.mark.parametrize("kind", list(FIG3_EXPECT))
+def test_fig3_table(kind):
+    spec = AdderSpec(kind=kind, n_bits=2, lsm_bits=2, const_bits=0)
+    got = [int(approx_add(U(a), U(b), spec)) for a, b in FIG3_COMBOS]
+    assert got == FIG3_EXPECT[kind]
+
+
+def test_fig3_error_rates():
+    """LOA errs on 5/10 combos; HERLOA and HALOC-AxA on exactly 1/10."""
+    acc = FIG3_EXPECT[ACCURATE]
+    assert sum(g != e for g, e in zip(FIG3_EXPECT[LOA], acc)) == 5
+    assert sum(g != e for g, e in zip(FIG3_EXPECT[HERLOA], acc)) == 1
+    assert sum(g != e for g, e in zip(FIG3_EXPECT[HALOC_AXA], acc)) == 1
+
+
+def test_fig3_herloa_closer_than_haloc_on_error_case():
+    """Paper: 'the result produced by HERLOA is closer to the accurate
+    value' on the shared error case 11+01 (100 vs 011 vs 010)."""
+    i = FIG3_COMBOS.index((0b11, 0b01))
+    acc = FIG3_EXPECT[ACCURATE][i]
+    assert abs(FIG3_EXPECT[HERLOA][i] - acc) < abs(FIG3_EXPECT[HALOC_AXA][i] - acc)
+
+
+# ---------------------------------------------------------------- Fig 4 ---
+
+def test_fig4_example_properties():
+    """16-bit HALOC-AxA with N=16, m=8, k=4 (paper Fig 4).
+
+    The paper's worked example reports accurate=53162 with approximate
+    output 53151 (ED=11).  The figure's operand values are not printed in
+    the text; we verify the *structural* claims instead and additionally
+    check that an operand pair consistent with the figure reproduces
+    ED = 11 exactly.
+    """
+    spec = AdderSpec(kind=HALOC_AXA, n_bits=16, lsm_bits=8, const_bits=4)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 16, size=20000, dtype=np.uint64)
+    b = rng.integers(0, 1 << 16, size=20000, dtype=np.uint64)
+    s = approx_add(a, b, spec)
+    # S[3:0] forced to 1.
+    assert np.all((s & U(0xF)) == U(0xF))
+    # S[5:4] are OR bits.
+    assert np.all(((s >> U(4)) & U(3)) == (((a | b) >> U(4)) & U(3)))
+    # There exist operands with accurate sum 53162 whose HALOC output is
+    # 53151 (the paper's example) — e.g. found by search below.
+    targets = []
+    for aa in range(0, 1 << 16, 7):  # stride keeps the search fast
+        bb = 53162 - aa
+        if 0 <= bb < (1 << 16):
+            out = int(approx_add(U(aa), U(bb), spec))
+            if out == 53151:
+                targets.append((aa, bb))
+    assert targets, "no operand pair reproduces the Fig-4 ED=11 example"
+
+
+# ------------------------------------------------- exhaustive semantics ---
+
+def _exhaustive_pairs(n_bits):
+    vals = np.arange(1 << n_bits, dtype=np.uint64)
+    return np.repeat(vals, 1 << n_bits), np.tile(vals, 1 << n_bits)
+
+
+def _bit(x, i):
+    return (x >> U(i)) & U(1)
+
+
+@pytest.mark.parametrize("m,k", [(4, 0), (4, 2), (6, 3), (8, 4)])
+def test_exhaustive_haloc_semantics(m, k):
+    """HALOC-AxA vs an independent per-bit reference on every 8-bit pair."""
+    n_bits = 8
+    a, b = _exhaustive_pairs(n_bits)
+    spec = AdderSpec(kind=HALOC_AXA, n_bits=n_bits, lsm_bits=m, const_bits=k)
+    got = approx_add(a, b, spec)
+
+    # Independent reference, built bit-by-bit (not sharing the impl's code).
+    g1 = _bit(a, m - 1) & _bit(b, m - 1)
+    p1 = _bit(a, m - 1) ^ _bit(b, m - 1)
+    g2 = _bit(a, m - 2) & _bit(b, m - 2)
+    x2 = _bit(a, m - 2) ^ _bit(b, m - 2)
+    ref = (((a >> U(m)) + (b >> U(m)) + g1) << U(m))
+    ref = ref | ((p1 | g2) << U(m - 1)) | (x2 << U(m - 2))
+    for i in range(k, m - 2):
+        ref = ref | ((_bit(a, i) | _bit(b, i)) << U(i))
+    for i in range(k):
+        ref = ref | (U(1) << U(i))
+    assert np.array_equal(got, ref)
+
+
+@pytest.mark.parametrize("kind", [k for k in ALL_KINDS if k != ACCURATE])
+def test_exhaustive_msm_exactness(kind):
+    """Above bit m the approximate sum equals exact-with-speculated-cin:
+    the ED is bounded by 2^(m+1) for every input pair (8-bit exhaustive)."""
+    n_bits, m, k = 8, 4, 2
+    spec = AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=m,
+                     const_bits=k if kind in ("oloca", "m_herloa", "haloc_axa") else 0)
+    a, b = _exhaustive_pairs(n_bits)
+    ed = np.abs(approx_add(a, b, spec).astype(np.int64)
+                - (a + b).astype(np.int64))
+    assert int(ed.max()) < lsm_error_bound(spec)
+
+
+def test_exhaustive_error_rate_ordering():
+    """HALOC error structure sits between LOA and HERLOA (8-bit, m=4)."""
+    from repro.core import exhaustive_error_metrics
+    meds = {}
+    for kind in (LOA, HERLOA, M_HERLOA, HALOC_AXA, LOAWA):
+        kk = 2 if kind in ("m_herloa", "haloc_axa") else 0
+        spec = AdderSpec(kind=kind, n_bits=8, lsm_bits=4, const_bits=kk)
+        meds[kind] = exhaustive_error_metrics(spec).med
+    assert meds[HERLOA] < meds[HALOC_AXA] < meds[LOAWA]
+    assert meds[HALOC_AXA] < meds[LOA] * 1.05  # comparable to or better
+
+
+# --------------------------------------------------------- jax parity -----
+
+@pytest.mark.parametrize("kind", list(ALL_KINDS))
+def test_numpy_jax_bit_identity(kind):
+    """The same source evaluates bit-identically under numpy and jnp."""
+    n_bits, m, k = 16, 8, 4
+    spec = AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=m,
+                     const_bits=k if kind in ("oloca", "m_herloa", "haloc_axa") else 0)
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 1 << n_bits, size=4096, dtype=np.uint32)
+    b = rng.integers(0, 1 << n_bits, size=4096, dtype=np.uint32)
+    ref = approx_add(a.astype(np.uint64), b.astype(np.uint64), spec)
+    got = np.asarray(approx_add(jnp.asarray(a), jnp.asarray(b), spec))
+    assert np.array_equal(got.astype(np.uint64), ref)
+    # int32 container (two's-complement path used inside models)
+    got32 = np.asarray(
+        approx_add_mod(jnp.asarray(a.astype(np.int32)),
+                       jnp.asarray(b.astype(np.int32)), spec))
+    assert np.array_equal(got32.astype(np.uint64) & U((1 << n_bits) - 1),
+                          ref & U((1 << n_bits) - 1))
+
+
+# ------------------------------------------------------ property tests ----
+
+adder_kinds = st.sampled_from([k for k in ALL_KINDS if k != ACCURATE])
+
+
+@st.composite
+def spec_and_operands(draw):
+    kind = draw(adder_kinds)
+    n_bits = draw(st.integers(min_value=6, max_value=32))
+    m = draw(st.integers(min_value=2, max_value=n_bits))
+    max_k = m - 2 if kind in ("m_herloa", "haloc_axa") else m
+    k = draw(st.integers(min_value=0, max_value=max_k)) \
+        if kind in ("oloca", "m_herloa", "haloc_axa") else 0
+    spec = AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=m, const_bits=k)
+    a = draw(st.integers(min_value=0, max_value=(1 << n_bits) - 1))
+    b = draw(st.integers(min_value=0, max_value=(1 << n_bits) - 1))
+    return spec, U(a), U(b)
+
+
+@given(spec_and_operands())
+@settings(max_examples=400, deadline=None)
+def test_property_commutative(so):
+    spec, a, b = so
+    assert approx_add(a, b, spec) == approx_add(b, a, spec)
+
+
+@given(spec_and_operands())
+@settings(max_examples=400, deadline=None)
+def test_property_error_bound(so):
+    spec, a, b = so
+    ed = abs(int(approx_add(a, b, spec)) - int(a + b))
+    assert ed < lsm_error_bound(spec)
+
+
+@given(spec_and_operands())
+@settings(max_examples=400, deadline=None)
+def test_property_zero_plus_zero(so):
+    spec, _, _ = so
+    # Constant-1 lower bits are the ONLY deviation for 0+0.
+    expect = (1 << spec.effective_const_bits) - 1
+    assert int(approx_add(U(0), U(0), spec)) == expect
+
+
+@given(spec_and_operands())
+@settings(max_examples=400, deadline=None)
+def test_property_high_bits_monotone_in_high_operands(so):
+    """Adding 2^m to an operand adds exactly 2^m to the output."""
+    spec, a, b = so
+    m = spec.lsm_bits
+    if int(a) + (1 << m) >= (1 << spec.n_bits):
+        return
+    s0 = int(approx_add(a, b, spec))
+    s1 = int(approx_add(U(int(a) + (1 << m)), b, spec))
+    assert s1 - s0 == 1 << m
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        AdderSpec(kind="nope")
+    with pytest.raises(ValueError):
+        AdderSpec(kind=HALOC_AXA, n_bits=8, lsm_bits=4, const_bits=3)
+    with pytest.raises(ValueError):
+        AdderSpec(kind=LOA, n_bits=8, lsm_bits=9)
+    s = paper_spec(HALOC_AXA)
+    assert (s.n_bits, s.lsm_bits, s.const_bits) == (32, 10, 5)
+
+
+def test_eta_independent_reference():
+    """ETA (bonus baseline, Zhu et al. [11]): left-to-right exact addition
+    until the first (1,1) pair, then all-ones — verified against a slow
+    per-bit Python reference on random + exhaustive-small inputs."""
+    def eta_ref(a, b, m):
+        low_a, low_b = a & ((1 << m) - 1), b & ((1 << m) - 1)
+        out = 0
+        poisoned = False
+        for i in range(m - 1, -1, -1):
+            abit, bbit = (low_a >> i) & 1, (low_b >> i) & 1
+            if not poisoned and abit == 1 and bbit == 1:
+                poisoned = True
+            out |= ((1 if poisoned else (abit ^ bbit)) << i)
+        high = (a >> m) + (b >> m)
+        return (high << m) | out
+
+    spec = AdderSpec(kind="eta", n_bits=8, lsm_bits=4)
+    for a in range(256):
+        for b in range(256):
+            got = int(approx_add(U(a), U(b), spec))
+            assert got == eta_ref(a, b, 4), (a, b)
+
+
+def test_haloc_fast_variant_bit_identical():
+    """approx_add(fast=True) is bit-identical on random 32-bit operands."""
+    spec = paper_spec(HALOC_AXA)
+    rng = np.random.default_rng(17)
+    a = rng.integers(0, 1 << 32, 100_000, dtype=np.uint64)
+    b = rng.integers(0, 1 << 32, 100_000, dtype=np.uint64)
+    np.testing.assert_array_equal(approx_add(a, b, spec),
+                                  approx_add(a, b, spec, fast=True))

@@ -1,0 +1,93 @@
+"""Full-call-graph HLO cost analyzer validation against hand counts.
+
+The roofline pipeline depends on launch/hlo_cost.py multiplying while-loop
+bodies by scan trip counts (XLA's cost_analysis only covers the entry
+computation — the motivating bug, see EXPERIMENTS.md caveats)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    m, k, n = 128, 256, 64
+
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    t = analyze(_hlo(f, a, b))
+    want = 2 * m * k * n
+    assert abs(t.flops - want) / want < 0.05, (t.flops, want)
+
+
+def test_scan_trip_count_multiplies_body():
+    trips, m = 17, 64
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    w = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    t = analyze(_hlo(f, x, w))
+    want = trips * 2 * m ** 3
+    # tanh + converts add a small epsilon; dots must be multiplied by trips
+    assert t.flops >= want, (t.flops, want)
+    assert t.flops < want * 1.5
+    dot_mults = [mult for _, _, mult in t.dots]
+    assert any(mult == trips for mult in dot_mults)
+
+
+def test_nested_scan_trips_compose():
+    inner, outer, m = 5, 7, 32
+
+    def f(x, w):
+        def outer_body(c, _):
+            def inner_body(ci, _):
+                return ci @ w, None
+
+            ci, _ = jax.lax.scan(inner_body, c, None, length=inner)
+            return ci, None
+
+        out, _ = jax.lax.scan(outer_body, x, None, length=outer)
+        return out
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    w = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    t = analyze(_hlo(f, x, w))
+    want = inner * outer * 2 * m ** 3
+    assert t.flops >= want * 0.95, (t.flops, want)
+    # XLA may unroll the tiny inner loop, but total work must match
+    assert t.flops < want * 1.6
+
+
+def test_parse_module_entry_detection():
+    def f(a):
+        return a * 2.0
+
+    text = _hlo(f, jax.ShapeDtypeStruct((8,), jnp.float32))
+    comps = parse_module(text)
+    assert any(c.is_entry for c in comps.values())
+
+
+def test_bytes_scale_with_tensor_size():
+    def f(a, b):
+        return a @ b
+
+    small = analyze(_hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                         jax.ShapeDtypeStruct((64, 64), jnp.float32)))
+    big = analyze(_hlo(f, jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                       jax.ShapeDtypeStruct((256, 256), jnp.float32)))
+    assert big.bytes > small.bytes * 8  # 16x elements

@@ -1,0 +1,61 @@
+"""Hardware cost model tests (Table I analog)."""
+
+import pytest
+
+from repro.core.hwcost import (PAPER_TABLE1, delay_ns, report,
+                               switching_energy_fj)
+from repro.core.netlist import gate_count, lsm_gates, transistor_count
+from repro.core.specs import TABLE1_KINDS, paper_spec
+
+
+def test_transistor_counts_vs_table1():
+    exact = {"accurate", "loa", "loawa", "oloca"}
+    for kind in TABLE1_KINDS:
+        t = transistor_count(paper_spec(kind))
+        p = PAPER_TABLE1[kind]["trans"]
+        if kind in exact:
+            assert t == p, (kind, t, p)
+        else:
+            assert abs(t - p) <= 60, (kind, t, p)
+
+
+def test_energy_anchors_and_predictions():
+    # anchors exact
+    for kind in ("accurate", "loa"):
+        assert abs(switching_energy_fj(paper_spec(kind))
+                   - PAPER_TABLE1[kind]["energy_fj"]) < 1e-6
+    # predictions within 8%
+    for kind in ("loawa", "oloca", "herloa", "m_herloa", "haloc_axa"):
+        e = switching_energy_fj(paper_spec(kind))
+        p = PAPER_TABLE1[kind]["energy_fj"]
+        assert abs(e - p) / p < 0.08, (kind, e, p)
+
+
+def test_haloc_is_cheapest_of_accuracy_improved():
+    """Paper claim: HALOC-AxA beats LOA/LOAWA/HERLOA/M-HERLOA on energy."""
+    e = {k: switching_energy_fj(paper_spec(k)) for k in TABLE1_KINDS}
+    for other in ("accurate", "loa", "loawa", "herloa", "m_herloa"):
+        assert e["haloc_axa"] < e[other], (other, e)
+
+
+def test_delay_model():
+    assert delay_ns(paper_spec("accurate")) == pytest.approx(0.24)
+    for kind in TABLE1_KINDS:
+        if kind != "accurate":
+            assert delay_ns(paper_spec(kind)) == pytest.approx(0.21)
+
+
+def test_lsm_gate_inventories():
+    g = lsm_gates(paper_spec("haloc_axa"))
+    # (m-k-2)=3 ORs + 1 carry-merge OR, 2 HA ANDs, 2 HA XORs
+    assert g == {"or2": 4, "and2": 2, "xor2": 2}
+    assert gate_count(paper_spec("loa")) == 11  # 10 OR + 1 AND
+    assert lsm_gates(paper_spec("accurate")) == {"or2": 0, "and2": 0,
+                                                 "xor2": 0}
+
+
+def test_report_row():
+    r = report(paper_spec("haloc_axa"))
+    assert r.transistors == 1538
+    assert 45 < r.energy_fj < 60
+    assert r.power_uw == pytest.approx(r.energy_fj / r.delay_ns)

@@ -1,0 +1,192 @@
+"""Substrate tests: data pipeline, checkpointing (+integrity/async),
+fault-tolerant train loop, straggler monitor, elastic resharding,
+gradient compression, optimizer."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, DataIterator, synthetic_batch
+from repro.optim import adamw
+from repro.optim.compression import (
+    CompressionConfig, init_error_feedback, int8_quantize_dequantize,
+    make_grad_transform, topk_sparsify_with_ef,
+)
+from repro.runtime.elastic import choose_mesh_shape, make_elastic_mesh, \
+    reshard_state
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.train_loop import SimulatedFault, TrainLoopConfig, run
+from repro.optim.adamw import AdamWConfig
+
+CFG = dataclasses.replace(get_smoke_config("qwen1.5-4b"))
+DATA = DataConfig(seq_len=32, global_batch=2, seed=7)
+OPT = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=60)
+
+
+# ------------------------------------------------------------------ data --
+
+def test_data_deterministic_and_resumable():
+    b1 = synthetic_batch(CFG, DATA, step=5)
+    b2 = synthetic_batch(CFG, DATA, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    it = DataIterator(CFG, DATA, start_step=0)
+    it.skip_to(5)
+    b3 = next(it)
+    np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_partitions_batch():
+    full = synthetic_batch(CFG, DataConfig(seq_len=32, global_batch=4), 0)
+    h0 = synthetic_batch(CFG, DataConfig(seq_len=32, global_batch=4,
+                                         host_id=0, num_hosts=2), 0)
+    assert h0["tokens"].shape[0] == 2
+    assert full["tokens"].shape[0] == 4
+
+
+def test_data_has_learnable_structure():
+    b = synthetic_batch(CFG, DataConfig(seq_len=128, global_batch=2), 0)
+    t = b["tokens"][0]
+    # copy motif: position 32..63 equals 0..31 within the first window
+    np.testing.assert_array_equal(t[32:64], t[:32])
+
+
+# ------------------------------------------------------------ checkpoint --
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))},
+             "step": jnp.int32(7)}
+    ck.save(7, state)
+    like = jax.eval_shape(lambda: state)
+    rest = ck.restore(like)
+    np.testing.assert_array_equal(np.asarray(rest["a"]), np.arange(10))
+    assert int(rest["step"]) == 7
+    # corrupt a leaf -> integrity error
+    d = os.path.join(str(tmp_path), "step_00000007")
+    fn = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, fn), "r+b") as f:
+        f.seek(64)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        ck.restore(like)
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"x": jnp.zeros(4)}
+    for s in (1, 2, 3, 4):
+        ck.async_save(s, state)
+    ck.wait()
+    steps = sorted(n for n in os.listdir(str(tmp_path))
+                   if n.startswith("step_"))
+    assert len(steps) == 2 and steps[-1].endswith("4")
+
+
+# -------------------------------------------------------------- training --
+
+def test_train_loop_loss_decreases(tmp_path):
+    loop = TrainLoopConfig(total_steps=40, ckpt_every=50, log_every=5,
+                           ckpt_dir=str(tmp_path))
+    out = run(CFG, OPT, DATA, loop)
+    first = out["history"][0]["loss"]
+    last = out["history"][-1]["loss"]
+    assert last < first - 0.2, (first, last)
+
+
+def test_train_loop_fault_recovery(tmp_path):
+    """Kill the step twice mid-run; the loop restores from checkpoint and
+    still reaches total_steps."""
+    fails = {"left": 2}
+
+    def hook(step):
+        if step == 25 and fails["left"] > 0:
+            fails["left"] -= 1
+            raise SimulatedFault("injected")
+
+    loop = TrainLoopConfig(total_steps=30, ckpt_every=10, log_every=10,
+                           ckpt_dir=str(tmp_path))
+    out = run(CFG, OPT, DATA, loop, fault_hook=hook)
+    assert out["failures"] == 2
+    assert int(np.asarray(out["state"]["step"])) == 30
+
+
+def test_train_loop_restart_resumes(tmp_path):
+    loop1 = TrainLoopConfig(total_steps=20, ckpt_every=10,
+                            ckpt_dir=str(tmp_path))
+    run(CFG, OPT, DATA, loop1)
+    loop2 = TrainLoopConfig(total_steps=30, ckpt_every=10,
+                            ckpt_dir=str(tmp_path))
+    out = run(CFG, OPT, DATA, loop2)
+    assert int(np.asarray(out["state"]["step"])) == 30
+
+
+# --------------------------------------------------------------- elastic --
+
+def test_choose_mesh_shape():
+    assert choose_mesh_shape(256, 16) == (16, 16)
+    assert choose_mesh_shape(240, 16) == (15, 16)      # lost a host
+    assert choose_mesh_shape(512, 16, pod_size=256) == (2, 16, 16)
+    with pytest.raises(ValueError):
+        choose_mesh_shape(8, 16)
+
+
+def test_elastic_reshard_roundtrip():
+    mesh1 = make_elastic_mesh(model_parallel=1, devices=jax.devices())
+    state = {"params": {"lm_head": {"w": jnp.ones((8, 16))}},
+             "step": jnp.int32(3)}
+    out = reshard_state(state, mesh1)
+    np.testing.assert_array_equal(np.asarray(out["params"]["lm_head"]["w"]),
+                                  np.ones((8, 16)))
+
+
+# ------------------------------------------------------------ compression --
+
+def test_topk_error_feedback_preserves_signal():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    ef = init_error_feedback(g)
+    total = jnp.zeros_like(g["w"])
+    steps = 200
+    for _ in range(steps):
+        kept, ef = topk_sparsify_with_ef(g, ef, ratio=0.05)
+        total = total + kept["w"]
+    # EF residual is bounded, so the replayed average -> g at rate 1/T
+    np.testing.assert_allclose(np.asarray(total) / steps,
+                               np.asarray(g["w"]), atol=0.1)
+    assert float(jnp.max(jnp.abs(ef["w"]))) < 20.0  # residual bounded
+
+
+def test_int8_quantize_dequantize_unbiased():
+    g = {"w": jnp.linspace(-1, 1, 1024, dtype=jnp.float32)}
+    out = int8_quantize_dequantize(g)
+    err = np.asarray(out["w"]) - np.asarray(g["w"])
+    assert np.max(np.abs(err)) < 2.0 / 127
+    assert make_grad_transform(CompressionConfig("none")) is None
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw.init(params)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=300,
+                      weight_decay=0.0)
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw.update(cfg, grads, opt, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor()
+    for i in range(20):
+        mon.record(i, 0.1)
+    assert mon.record(20, 0.5)
+    assert not mon.record(21, 0.11)

@@ -1,0 +1,61 @@
+"""End-to-end system test: train (approx numerics ON) -> checkpoint ->
+restore -> batched serving, plus the paper pipeline end to end."""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig
+from repro.models import transformer as T
+from repro.models.serving import generate
+from repro.numerics.approx_ops import make_numerics
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import TrainLoopConfig, run
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    cfg = get_smoke_config("qwen3-4b").with_approx(
+        make_numerics("haloc_axa", "residual", fast=True))
+    data = DataConfig(seq_len=32, global_batch=2, seed=3)
+    opt = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=30)
+    loop = TrainLoopConfig(total_steps=30, ckpt_every=10, log_every=10,
+                           ckpt_dir=str(tmp_path))
+    out = run(cfg, opt, data, loop)
+    assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+
+    # restore params into a fresh process-state and serve
+    ck = Checkpointer(str(tmp_path))
+    template = jax.eval_shape(
+        lambda: __import__("repro.launch.steps", fromlist=["init_state"])
+        .init_state(jax.random.key(0), cfg, opt))
+    state = ck.restore(template)
+    prompts = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+        jnp.int32)}
+    seqs = generate(state["params"], cfg, prompts, max_new_tokens=6,
+                    temperature=0.0)
+    assert seqs.shape == (2, 14)
+    assert int(seqs.max()) < cfg.vocab_size and int(seqs.min()) >= 0
+
+
+def test_paper_pipeline_end_to_end():
+    """Adder -> error metrics -> hardware cost -> image app, one flow."""
+    from repro.core import paper_spec, simulate_error_metrics
+    from repro.core.hwcost import report
+    from repro.image.pipeline import reconstruct, synthetic_image
+    from repro.image.quality import quality_band, ssim
+
+    spec = paper_spec("haloc_axa")
+    met = simulate_error_metrics(spec, n_samples=100_000)
+    assert 110 < met.med < 140              # Table I: 123.9
+    hw = report(spec)
+    assert hw.transistors == 1538
+    img = synthetic_image(96)
+    rec = reconstruct(img, spec)
+    s = ssim(img, rec)
+    assert quality_band(s) in ("high", "acceptable")
