@@ -1,6 +1,7 @@
-"""Kernel micro-bench: wall time per call (interpret mode on CPU — the
-numbers validate plumbing, not TPU perf) + emulation-efficiency of the
-fused approximate add vs the unfused op-by-op jnp pipeline."""
+"""Kernel micro-bench: wall time per call (pallas interpret mode on CPU —
+the numbers validate plumbing, not TPU perf) + emulation-efficiency of
+the fused approximate add vs the unfused op-by-op jnp pipeline, both
+expressed through repro.ax engines."""
 
 from __future__ import annotations
 
@@ -8,12 +9,12 @@ import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adders import approx_add_mod
+from repro.ax import make_engine
 from repro.core.specs import paper_spec
-from repro.kernels import ops
+
+SPEC = paper_spec("haloc_axa")
 
 
 def _time(fn, *args, reps=3):
@@ -25,29 +26,29 @@ def _time(fn, *args, reps=3):
 
 
 def run() -> List[str]:
+    import jax.numpy as jnp
     out = []
-    spec = paper_spec("haloc_axa")
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
     b = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
 
-    us = _time(lambda x, y: ops.approx_add(x, y, spec), a, b)
-    out.append(f"kernel/approx_add_pallas_1Mi32,{us:.0f},interpret=True")
+    pallas = make_engine(SPEC, backend="pallas")
+    us = _time(pallas.add, a, b)
+    out.append(f"kernel/approx_add_pallas_1Mi32,{us:.0f},backend=pallas")
 
-    @jax.jit
-    def unfused(x, y):
-        xu = jax.lax.bitcast_convert_type(x, jnp.uint32)
-        yu = jax.lax.bitcast_convert_type(y, jnp.uint32)
-        return jax.lax.bitcast_convert_type(
-            approx_add_mod(xu, yu, spec), jnp.int32)
+    xla = make_engine(SPEC, backend="jax")
+    us2 = _time(xla.add, a, b)
+    out.append(f"kernel/approx_add_unfused_xla_1Mi32,{us2:.0f},backend=jax")
 
-    us2 = _time(unfused, a, b)
-    out.append(f"kernel/approx_add_unfused_xla_1Mi32,{us2:.0f},baseline")
+    xla_fast = make_engine(SPEC, backend="jax", fast=True)
+    us2f = _time(xla_fast.add, a, b)
+    out.append(
+        f"kernel/approx_add_fused_xla_1Mi32,{us2f:.0f},backend=jax;fast=1")
 
     a8 = jnp.asarray(rng.integers(-128, 128, (256, 512), np.int8))
     b8 = jnp.asarray(rng.integers(-128, 128, (512, 256), np.int8))
-    us3 = _time(lambda x, y: ops.approx_matmul(x, y, spec), a8, b8)
-    out.append(f"kernel/approx_matmul_256x512x256,{us3:.0f},interpret=True")
+    us3 = _time(pallas.matmul, a8, b8)
+    out.append(f"kernel/approx_matmul_256x512x256,{us3:.0f},backend=pallas")
 
     print("\n== Kernel micro-bench (CPU interpret; TPU is the target) ==")
     for line in out:

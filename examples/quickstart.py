@@ -1,20 +1,24 @@
-"""Quickstart: the paper's adder in 30 lines.
+"""Quickstart: the paper's adder in 40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import (AdderSpec, approx_add, paper_spec,
-                        simulate_error_metrics)
+from repro.ax import available_backends, make_engine
+from repro.core import paper_spec, simulate_error_metrics
 from repro.core.hwcost import report
 from repro.core.metrics import summarize
+from repro.numerics.fixed_point import FixedPointFormat
 
-# 1. build the paper's adder: 32-bit, 10-bit approximate LSM, 5 constant bits
+# 1. the spec-first engine: one handle per (adder, format, backend).
+#    paper's adder: 32-bit, 10-bit approximate LSM, 5 constant-one bits.
 spec = paper_spec("haloc_axa")
+ax = make_engine(spec, backend="numpy")
 a, b = np.uint64(53_000), np.uint64(12_345)
-print(f"HALOC-AxA: {int(a)} + {int(b)} = {int(approx_add(a, b, spec))} "
+print(f"HALOC-AxA: {int(a)} + {int(b)} = {int(ax.add_full(a, b))} "
       f"(exact {int(a + b)})")
+print(f"backends on this host: {available_backends()}")
 
 # 2. error metrics vs the baselines (paper Table I, right half)
 reports = [simulate_error_metrics(paper_spec(k), n_samples=200_000)
@@ -33,6 +37,15 @@ for k in ("accurate", "herloa", "haloc_axa"):
 rng = np.random.default_rng(0)
 x = rng.integers(0, 1 << 32, 8, dtype=np.uint64)
 y = rng.integers(0, 1 << 32, 8, dtype=np.uint64)
-ed = np.abs(approx_add(x, y, spec).astype(np.int64)
-            - (x + y).astype(np.int64))
+ed = np.abs(ax.add_full(x, y).astype(np.int64) - (x + y).astype(np.int64))
 print(f"\nbatch of 8 adds, error distances: {ed.tolist()} (all < 2^11)")
+
+# 5. the jitted model path: a 16-bit fixed-point engine with the fused
+#    implementation, trainable through the straight-through estimator.
+lm = make_engine("haloc_axa", fmt=FixedPointFormat(16, 8), backend="jax",
+                 fast=True)
+import jax.numpy as jnp  # noqa: E402
+
+xs = jnp.linspace(-1.0, 1.0, 8)
+ys = jnp.linspace(1.0, -1.0, 8)
+print(f"\nresidual_add (float STE path): {np.asarray(lm.residual_add(xs, ys)).round(3).tolist()}")

@@ -1,0 +1,62 @@
+"""``repro.ax`` — the one way the codebase touches approximate arithmetic.
+
+Three pillars:
+
+1. **Adder registry** (:mod:`repro.ax.registry`): ``@register_adder``
+   pairs a reference implementation with an optional fused one; the kind
+   tuples in ``repro.core.specs`` and :class:`AdderSpec` validation are
+   derived from it, so new adders plug in without editing core.
+2. **Backend registry** (:mod:`repro.ax.backends`): named execution
+   engines — ``"numpy"``, ``"jax"``, ``"pallas"``, ``"pallas_tpu"`` —
+   replacing ad-hoc ``interpret`` flags and duplicated pad/tile plumbing.
+3. **Spec-first handle** (:mod:`repro.ax.engine`):
+   ``ax = make_engine(spec, fmt=..., backend=...)`` with ``.add``,
+   ``.add_signed``, ``.sum``, ``.residual_add``, ``.matmul``,
+   ``.butterfly``.
+
+Only the registry is imported eagerly (it must be importable while
+``repro.core.adders`` registers the builtin family); the engine and
+backends — which pull in jax — resolve lazily on first attribute access.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.ax.registry import (  # noqa: F401
+    AdderImpl,
+    const_kinds,
+    get_adder,
+    register_adder,
+    registered_kinds,
+    table1_kinds,
+    unregister_adder,
+)
+
+_LAZY = {
+    "AxEngine": "repro.ax.engine",
+    "make_engine": "repro.ax.engine",
+    "Backend": "repro.ax.backends",
+    "available_backends": "repro.ax.backends",
+    "default_backend_name": "repro.ax.backends",
+    "get_backend": "repro.ax.backends",
+    "register_backend": "repro.ax.backends",
+}
+
+__all__ = [
+    "AdderImpl", "AxEngine", "Backend", "available_backends",
+    "const_kinds", "default_backend_name", "get_adder", "get_backend",
+    "make_engine", "register_adder", "register_backend",
+    "registered_kinds", "table1_kinds", "unregister_adder",
+]
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(__all__)

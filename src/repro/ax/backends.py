@@ -1,0 +1,303 @@
+"""Execution backends for the approximate-arithmetic engine.
+
+A backend is a named execution strategy for the registered adders:
+
+- ``"numpy"``      host-side uint64 behavioral simulation (the Table-I
+                   error/Monte-Carlo path and the image FFT pipeline).
+- ``"jax"``        jitted elementwise emulation on jax arrays (the model
+                   integration path: residual adds, reductions).
+- ``"pallas"``     Pallas kernels in interpret mode (CPU validation of
+                   the fused TPU kernels).
+- ``"pallas_tpu"`` Pallas kernels compiled through Mosaic (TPU).
+
+Backends replace the ad-hoc ``interpret: bool`` flags and the pad/reshape
+plumbing previously duplicated in ``repro.kernels.ops``: call sites name
+a backend (or let :func:`default_backend_name` auto-detect) and the
+padding/tiling details live here, once.
+
+All backends are bit-identical for the ops they share — enforced by the
+cross-backend sweep in ``tests/test_ax.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adders import approx_add, approx_add_mod
+from repro.core.specs import AdderSpec
+
+TWIDDLE_FRAC = 14
+
+
+class Backend:
+    """Abstract execution engine for approximate-arithmetic primitives.
+
+    All array-valued methods take *container* operands: N-bit unsigned
+    patterns stored in a dtype with enough room (uint64 on the host,
+    int32/uint32 under jax — matching the hardware's two's-complement
+    wraparound when reduced mod 2^N).
+    """
+
+    name = "abstract"
+
+    def available(self) -> bool:
+        return True
+
+    def add(self, a, b, spec: AdderSpec, *, fast: bool = False):
+        """Elementwise approximate add reduced mod 2^N (container dtype)."""
+        raise NotImplementedError
+
+    def add_full(self, a, b, spec: AdderSpec, *, fast: bool = False):
+        """Full (N+1)-bit unsigned sum — host-side error analysis only."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no full-width add; use the "
+            f"'numpy' backend for error analysis")
+
+    def matmul(self, a, b, spec: AdderSpec, *, block=(128, 128, 128),
+               fast: bool = False):
+        """int8 (M,K) @ int8 (K,N) -> int32 with exact per-K-tile dots and
+        approximate inter-tile accumulation."""
+        raise NotImplementedError
+
+    def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
+                  *, inverse: bool = False):
+        """One radix-2 FFT butterfly stage (exact Q1.14 twiddle multiplies,
+        approximate adds); int32 (rows, half) planes + (half,) twiddles."""
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        return f"<ax backend {self.name!r}>"
+
+
+# ------------------------------------------------------------------ numpy --
+
+class NumpyBackend(Backend):
+    """Host behavioral simulation: uint64 containers, vectorized numpy."""
+
+    name = "numpy"
+
+    def add(self, a, b, spec, *, fast=False):
+        return approx_add_mod(np.asarray(a), np.asarray(b), spec, fast=fast)
+
+    def add_full(self, a, b, spec, *, fast=False):
+        return approx_add(np.asarray(a), np.asarray(b), spec, fast=fast)
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+        from repro.kernels.ref import ref_approx_matmul
+        return ref_approx_matmul(np.asarray(a), np.asarray(b), spec,
+                                 bk=block[2])
+
+    def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
+                  inverse=False):
+        from repro.kernels.ref import ref_butterfly
+        return ref_butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec,
+                             inverse=inverse)
+
+
+# -------------------------------------------------------------------- jax --
+
+def _as_u32(x):
+    if jnp.issubdtype(x.dtype, jnp.signedinteger):
+        return jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.uint32)
+    return x
+
+
+def _like(x, ref_dtype):
+    if jnp.issubdtype(ref_dtype, jnp.signedinteger):
+        return jax.lax.bitcast_convert_type(x, jnp.int32)
+    return x.astype(ref_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "fast"))
+def _jax_add(a, b, spec: AdderSpec, fast: bool):
+    s = approx_add_mod(_as_u32(a), _as_u32(b), spec, fast=fast)
+    return _like(s, a.dtype)
+
+
+def _mul_q14(x, w):
+    """Exact (x * w + half) >> 14 for int32 x and Q1.14 w without int64:
+    16-bit limb decomposition (same identity as the Pallas kernel)."""
+    half = jnp.int32(1 << (TWIDDLE_FRAC - 1))
+    hi = x >> 16
+    lo = x & jnp.int32(0xFFFF)
+    return (hi * w << (16 - TWIDDLE_FRAC)) + ((lo * w + half) >> TWIDDLE_FRAC)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "inverse"))
+def _jax_butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
+                   inverse: bool):
+    def add(x, y):
+        return _jax_add(x, y, spec, False)
+
+    rr, ri = _mul_q14(b_re, w_re), _mul_q14(b_re, w_im)
+    ir, ii = _mul_q14(b_im, w_re), _mul_q14(b_im, w_im)
+    t_re = add(rr, -ii)
+    t_im = add(ri, ir)
+    top_re, top_im = add(a_re, t_re), add(a_im, t_im)
+    bot_re, bot_im = add(a_re, -t_re), add(a_im, -t_im)
+    if inverse:
+        halve = lambda x: (x + 1) >> 1  # noqa: E731
+        return (halve(top_re), halve(top_im), halve(bot_re), halve(bot_im))
+    return top_re, top_im, bot_re, bot_im
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "fast"))
+def _jax_matmul(a, b, spec: AdderSpec, block, fast: bool):
+    bk = block[2]
+    k = a.shape[1]
+    a32, b32 = a.astype(jnp.int32), b.astype(jnp.int32)
+    acc = None
+    for k0 in range(0, k, bk):
+        part = jax.lax.dot(a32[:, k0:k0 + bk], b32[k0:k0 + bk])
+        acc = part if acc is None else _jax_add(acc, part, spec, fast)
+    return acc
+
+
+class JaxBackend(Backend):
+    """Jitted elementwise emulation on jax arrays (XLA, any device)."""
+
+    name = "jax"
+
+    def add(self, a, b, spec, *, fast=False):
+        return _jax_add(jnp.asarray(a), jnp.asarray(b), spec, fast)
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+        return _jax_matmul(jnp.asarray(a), jnp.asarray(b), spec,
+                           tuple(block), fast)
+
+    def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
+                  inverse=False):
+        w_re = jnp.asarray(w_re)[None, :]
+        w_im = jnp.asarray(w_im)[None, :]
+        return _jax_butterfly(jnp.asarray(a_re), jnp.asarray(a_im),
+                              jnp.asarray(b_re), jnp.asarray(b_im),
+                              w_re, w_im, spec, inverse)
+
+
+# ----------------------------------------------------------------- pallas --
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret", "fast"))
+def _pallas_elementwise_add(a, b, spec: AdderSpec, interpret: bool,
+                            fast: bool):
+    """Tile plumbing for the fused elementwise kernel: flatten to a
+    (rows, 256) grid with ONE pad per operand (no intermediate zeros
+    buffer), run the kernel, slice back."""
+    from repro.kernels.approx_add import approx_add_pallas
+    del fast  # the kernel body is the fused form already
+    shape = a.shape
+    size = int(np.prod(shape)) if shape else 1
+    n_cols = 256
+    rows = -(-size // n_cols)
+    if rows > 256:  # keep rows a multiple of the 256-row block
+        rows = -(-rows // 256) * 256
+    pad = rows * n_cols - size
+    ap = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows, n_cols)
+    bp = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows, n_cols)
+    out = approx_add_pallas(ap, bp, spec, interpret=interpret)
+    return out.reshape(-1)[:size].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def _pallas_matmul(a, b, spec: AdderSpec, block, interpret: bool):
+    from repro.kernels.approx_matmul import approx_matmul_pallas
+    bm, bn, bk = block
+    ap, m0, _ = _pad2(a, bm, bk)
+    bp, _, n0 = _pad2(b, bk, bn)
+    out = approx_matmul_pallas(ap, bp, spec, block=block,
+                               interpret=interpret)
+    return out[:m0, :n0]
+
+
+class PallasBackend(Backend):
+    """Pallas kernels in interpret mode — validates the fused TPU kernel
+    bodies on any host."""
+
+    name = "pallas"
+    interpret = True
+
+    def add(self, a, b, spec, *, fast=False):
+        return _pallas_elementwise_add(jnp.asarray(a), jnp.asarray(b), spec,
+                                       self.interpret, fast)
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+        return _pallas_matmul(jnp.asarray(a), jnp.asarray(b), spec,
+                              tuple(block), self.interpret)
+
+    def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
+                  inverse=False):
+        from repro.kernels.butterfly import butterfly_pallas
+        return butterfly_pallas(
+            jnp.asarray(a_re), jnp.asarray(a_im), jnp.asarray(b_re),
+            jnp.asarray(b_im), jnp.asarray(w_re), jnp.asarray(w_im),
+            spec, inverse=inverse, interpret=self.interpret)
+
+
+class PallasTpuBackend(PallasBackend):
+    """Pallas kernels compiled through Mosaic (requires a TPU runtime)."""
+
+    name = "pallas_tpu"
+    interpret = False
+
+    def available(self) -> bool:
+        try:
+            return jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - backend probe
+            return False
+
+
+# --------------------------------------------------------------- registry --
+
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register a backend instance under ``backend.name``."""
+    if backend.name in _BACKENDS:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(backend: Union[str, Backend, None] = None) -> Backend:
+    """Resolve a backend by name; ``None`` auto-detects."""
+    if backend is None:
+        backend = default_backend_name()
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        return _BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: "
+            f"{sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> Dict[str, bool]:
+    """name -> availability on this host."""
+    return {name: be.available() for name, be in sorted(_BACKENDS.items())}
+
+
+def default_backend_name() -> str:
+    """``pallas_tpu`` when a TPU runtime is attached, else ``jax``."""
+    if _BACKENDS["pallas_tpu"].available():
+        return "pallas_tpu"
+    return "jax"
+
+
+register_backend(NumpyBackend())
+register_backend(JaxBackend())
+register_backend(PallasBackend())
+register_backend(PallasTpuBackend())

@@ -1,0 +1,199 @@
+"""The spec-first execution handle: one object per (adder, format,
+backend) that every approximate-arithmetic call site consumes.
+
+    from repro.ax import make_engine
+
+    ax = make_engine("haloc_axa", fmt=FixedPointFormat(16, 8))
+    z = ax.residual_add(x, y)          # float STE path (models)
+    s = ax.add_signed(qx, qy)          # fixed-point containers
+    c = ax.add(a, b)                   # raw N-bit containers, mod 2^N
+
+Engines are frozen, hashable, and cached: two calls to ``make_engine``
+with the same arguments return the same object, so jit caches keyed on
+the engine hit across call sites.  The engine replaces the
+(spec, fmt, fast, interpret) tuples previously re-derived by numerics,
+the image/FFT pipeline, model layers, and benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.ax.backends import Backend, get_backend
+from repro.ax.registry import get_adder
+from repro.core.specs import AdderSpec
+from repro.numerics.fixed_point import (
+    FixedPointFormat,
+    container_to_signed,
+    dequantize,
+    quantize,
+    signed_to_container,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxEngine:
+    """Approximate-arithmetic execution handle.
+
+    Attributes:
+      spec: the adder (validated against the adder registry).
+      fmt: fixed-point format for the signed/float entry points; ``None``
+        for raw-container use (e.g. the 32-bit image FFT, which manages
+        its own Q-format).
+      backend: resolved execution backend.
+      fast: prefer the registered fused implementation (bit-identical).
+    """
+
+    spec: AdderSpec
+    fmt: Optional[FixedPointFormat]
+    backend: Backend
+    fast: bool = False
+
+    # ------------------------------------------------------ raw containers
+
+    def add(self, a, b):
+        """Elementwise approximate add mod 2^N on N-bit containers."""
+        return self.backend.add(a, b, self.spec, fast=self.fast)
+
+    def add_full(self, a, b):
+        """Full (N+1)-bit unsigned sum (host error analysis; numpy)."""
+        return self.backend.add_full(a, b, self.spec, fast=self.fast)
+
+    # --------------------------------------------------------- fixed point
+
+    def add_signed(self, qx, qy):
+        """Two's-complement fixed-point add (signed int32 containers)."""
+        fmt = self._require_fmt("add_signed")
+        a = signed_to_container(qx, fmt)
+        b = signed_to_container(qy, fmt)
+        return container_to_signed(self.add(a, b), fmt)
+
+    def sum(self, q, axis: int = -1):
+        """Log-depth tree reduction with approximate partial sums (the
+        accumulator of a MAC array built from these adders)."""
+        self._require_fmt("sum")
+        q = jnp.moveaxis(q, axis, -1)
+        n = q.shape[-1]
+        pow2 = 1 << (n - 1).bit_length()
+        if pow2 != n:
+            pad = [(0, 0)] * (q.ndim - 1) + [(0, pow2 - n)]
+            q = jnp.pad(q, pad)
+        while q.shape[-1] > 1:
+            half = q.shape[-1] // 2
+            q = self.add_signed(q[..., :half], q[..., half:])
+        return q[..., 0]
+
+    # --------------------------------------------------------- float entry
+
+    def residual_add(self, x, y):
+        """Float-in/float-out residual-stream add: quantize -> approximate
+        add -> dequantize, with a straight-through estimator (gradient of
+        an exact add) so the op is trainable."""
+        if get_adder(self.spec.kind).is_exact:
+            return x + y
+        self._require_fmt("residual_add")
+        return _ste_residual_add(self, x, y)
+
+    # ----------------------------------------------------------- compound
+
+    def matmul(self, a, b, block=(128, 128, 128)):
+        """int8 GEMM with approximate inter-K-tile accumulation."""
+        return self.backend.matmul(a, b, self.spec, block=block,
+                                   fast=self.fast)
+
+    def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im,
+                  inverse: bool = False):
+        """One radix-2 FFT butterfly stage through the approximate adder."""
+        return self.backend.butterfly(a_re, a_im, b_re, b_im, w_re, w_im,
+                                      self.spec, inverse=inverse)
+
+    # -------------------------------------------------------------- misc
+
+    def replace(self, **kw) -> "AxEngine":
+        """A new engine with some fields swapped (``backend`` may be a
+        name string)."""
+        if "backend" in kw:
+            kw["backend"] = get_backend(kw["backend"])
+        return dataclasses.replace(self, **kw)
+
+    def _require_fmt(self, what: str) -> FixedPointFormat:
+        if self.fmt is None:
+            raise ValueError(
+                f"AxEngine.{what} needs a fixed-point format; pass "
+                f"fmt=FixedPointFormat(...) to make_engine")
+        return self.fmt
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ste_residual_add(engine: AxEngine, x, y):
+    qx, qy = quantize(x, engine.fmt), quantize(y, engine.fmt)
+    return dequantize(engine.add_signed(qx, qy), engine.fmt, x.dtype)
+
+
+def _ste_fwd(engine, x, y):
+    return _ste_residual_add(engine, x, y), None
+
+
+def _ste_bwd(engine, _res, g):
+    # Straight-through: d(approx_add)/dx ~= d(x+y)/dx = 1.
+    return g, g
+
+
+_ste_residual_add.defvjp(_ste_fwd, _ste_bwd)
+
+
+def _default_spec(kind: str, n_bits: int) -> AdderSpec:
+    """Scale the paper's 32-bit (m=10, k=5) partition to an ``n_bits``
+    datapath: m = n/2, k = m/2 (the paper's own Fig-4 example is exactly
+    the N=16/m=8/k=4 instance of this rule)."""
+    try:
+        entry = get_adder(kind)
+    except KeyError:
+        raise ValueError(f"unknown adder kind {kind!r}") from None
+    if entry.is_exact:
+        return AdderSpec(kind=kind, n_bits=n_bits)
+    if n_bits == 32:
+        m, k = 10, 5
+    else:
+        m = max(2, n_bits // 2)
+        k = m // 2
+    return AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=m,
+                     const_bits=k if entry.const_section else 0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_engine_cached(spec: AdderSpec, fmt: Optional[FixedPointFormat],
+                        backend: Backend, fast: bool) -> AxEngine:
+    return AxEngine(spec=spec, fmt=fmt, backend=backend, fast=fast)
+
+
+def make_engine(spec: Union[AdderSpec, str],
+                fmt: Optional[FixedPointFormat] = None,
+                backend: Union[str, Backend, None] = None,
+                fast: bool = False) -> AxEngine:
+    """Build (or fetch the cached) execution engine.
+
+    Args:
+      spec: an :class:`AdderSpec`, or a registered kind name — a bare name
+        gets the paper's (m, k) partition scaled to the format width
+        (N=32 when no ``fmt`` is given).
+      fmt: fixed-point format for the signed/float entry points.  Must
+        match ``spec.n_bits`` for non-exact adders.  ``None`` restricts
+        the engine to the raw-container ops.
+      backend: backend name (``"numpy" | "jax" | "pallas" | "pallas_tpu"``),
+        a :class:`Backend` instance, or ``None`` to auto-detect.
+      fast: prefer the registered algebraically-fused implementation.
+    """
+    if isinstance(spec, str):
+        spec = _default_spec(spec, fmt.n_bits if fmt is not None else 32)
+    if (fmt is not None and not get_adder(spec.kind).is_exact
+            and spec.n_bits != fmt.n_bits):
+        raise ValueError(
+            f"adder width N={spec.n_bits} must match fixed-point "
+            f"container n_bits={fmt.n_bits}")
+    return _make_engine_cached(spec, fmt, get_backend(backend), fast)

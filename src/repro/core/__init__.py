@@ -2,7 +2,6 @@
 # error metrics, hardware cost models, and training-compatible wrappers.
 from repro.core.specs import (  # noqa: F401
     ACCURATE,
-    ALL_KINDS,
     ETA,
     HALOC_AXA,
     HERLOA,
@@ -10,7 +9,6 @@ from repro.core.specs import (  # noqa: F401
     LOAWA,
     M_HERLOA,
     OLOCA,
-    TABLE1_KINDS,
     AdderSpec,
     paper_spec,
     table1_specs,
@@ -26,3 +24,14 @@ from repro.core.metrics import (  # noqa: F401
     exhaustive_error_metrics,
     simulate_error_metrics,
 )
+
+# ALL_KINDS / TABLE1_KINDS / CONST_KINDS are registry-derived: resolve
+# them on access so adders registered after import are visible here too.
+_REGISTRY_DERIVED = ("ALL_KINDS", "TABLE1_KINDS", "CONST_KINDS")
+
+
+def __getattr__(name: str):
+    if name in _REGISTRY_DERIVED:
+        from repro.core import specs
+        return getattr(specs, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,5 +1,11 @@
 """Bit-exact behavioral models of the paper's approximate adders.
 
+Each adder registers itself with the :mod:`repro.ax` adder registry
+(``@register_adder``), pairing the reference form with its fused variant
+where one exists; :func:`approx_add` dispatches through that registry,
+and call sites outside core consume these models through
+``repro.ax.make_engine`` (see MIGRATION.md).
+
 Every function below is written with *operators only* (``& | ^ >> << + *``)
 so the SAME code path runs on
 
@@ -45,6 +51,7 @@ no-forcing variant is used).
 
 from __future__ import annotations
 
+from repro.ax.registry import get_adder, register_adder
 from repro.core import specs as specs_lib
 from repro.core.specs import AdderSpec
 
@@ -66,10 +73,12 @@ def _split_bits(a, b, m: int):
     return g1, p1, g2, x2
 
 
+@register_adder(specs_lib.ACCURATE, table1=True, order=0, is_exact=True)
 def accurate_add(a, b, spec: AdderSpec):
     return a + b
 
 
+@register_adder(specs_lib.LOA, table1=True, order=1)
 def loa_add(a, b, spec: AdderSpec):
     m = spec.lsm_bits
     low_mask = _ones(m)
@@ -79,6 +88,7 @@ def loa_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
+@register_adder(specs_lib.LOAWA, table1=True, order=2)
 def loawa_add(a, b, spec: AdderSpec):
     m = spec.lsm_bits
     low_mask = _ones(m)
@@ -87,6 +97,7 @@ def loawa_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
+@register_adder(specs_lib.OLOCA, table1=True, order=3, const_section=True)
 def oloca_add(a, b, spec: AdderSpec):
     m, k = spec.lsm_bits, spec.const_bits
     const_mask = _ones(k)
@@ -101,6 +112,7 @@ def oloca_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
+@register_adder(specs_lib.ETA, order=7)
 def eta_add(a, b, spec: AdderSpec):
     """Error-tolerant adder (Zhu et al. [11]) — bonus baseline.
 
@@ -126,6 +138,7 @@ def eta_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
+@register_adder(specs_lib.HERLOA, table1=True, order=4, min_lsm_bits=2)
 def herloa_add(a, b, spec: AdderSpec):
     m = spec.lsm_bits
     g1, p1, g2, x2 = _split_bits(a, b, m)
@@ -139,6 +152,8 @@ def herloa_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
+@register_adder(specs_lib.M_HERLOA, table1=True, order=5, const_section=True,
+                min_lsm_bits=2, const_margin=2)
 def m_herloa_add(a, b, spec: AdderSpec):
     m, k = spec.lsm_bits, spec.const_bits
     g1, p1, g2, x2 = _split_bits(a, b, m)
@@ -200,35 +215,29 @@ def haloc_axa_add_fast(a, b, spec: AdderSpec):
     return (t | (g2b << 1) | x2b | ((a | b) & or_mask)) | _ones(k)
 
 
-_IMPLS = {
-    specs_lib.ACCURATE: accurate_add,
-    specs_lib.LOA: loa_add,
-    specs_lib.LOAWA: loawa_add,
-    specs_lib.OLOCA: oloca_add,
-    specs_lib.ETA: eta_add,
-    specs_lib.HERLOA: herloa_add,
-    specs_lib.M_HERLOA: m_herloa_add,
-    specs_lib.HALOC_AXA: haloc_axa_add,
-}
+# The proposed adder registers its reference/fused pair once both forms
+# are defined; every other entry registers at its decorator above.
+register_adder(specs_lib.HALOC_AXA, fast_impl=haloc_axa_add_fast,
+               table1=True, order=6, const_section=True, min_lsm_bits=2,
+               const_margin=2)(haloc_axa_add)
 
 
 def approx_add(a, b, spec: AdderSpec, fast: bool = False):
-    """Dispatch on ``spec.kind``.  Works for numpy and jax arrays.
+    """Dispatch on ``spec.kind`` via the adder registry.  Works for numpy
+    and jax arrays.
 
     ``a``/``b`` must hold N-bit unsigned values in a container with at least
     N+1 bits.  The full (N+1)-bit sum is returned in the container dtype.
-    ``fast=True`` selects the algebraically-fused variant where one exists
-    (bit-identical; fewer vector ops — see haloc_axa_add_fast).
+    ``fast=True`` selects the registered algebraically-fused variant where
+    one exists (bit-identical; fewer vector ops — see haloc_axa_add_fast).
     """
-    if fast and spec.kind == specs_lib.HALOC_AXA:
-        return haloc_axa_add_fast(a, b, spec)
     try:
-        fn = _IMPLS[spec.kind]
+        entry = get_adder(spec.kind)
     except KeyError:  # pragma: no cover - guarded by AdderSpec validation
         raise ValueError(f"unknown adder kind {spec.kind!r}") from None
     # Degenerate LSM widths fall back cleanly: the HERLOA/HALOC families
     # require m >= 2 (enforced by AdderSpec); LOA/OLOCA work for any m >= 1.
-    return fn(a, b, spec)
+    return entry.select(fast)(a, b, spec)
 
 
 def approx_add_mod(a, b, spec: AdderSpec, fast: bool = False):

@@ -27,7 +27,6 @@ from typing import Dict
 import numpy as np
 
 from repro.core import specs as S
-from repro.core.adders import approx_add
 from repro.core.netlist import (
     T_AND2, T_OR2, T_XOR2, lsm_gates, transistor_count, _cla_transistors,
 )
@@ -70,10 +69,11 @@ def _toggle_activity(spec: AdderSpec, n_vectors: int = 20000,
                      seed: int = 11) -> float:
     """Average per-output-bit toggle rate of the adder over a random
     vector stream (proxy for internal switching activity)."""
+    from repro.ax import make_engine  # lazy: core loads before repro.ax
     rng = np.random.default_rng(seed)
     a = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
     b = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
-    s = approx_add(a, b, spec)
+    s = make_engine(spec, backend="numpy").add_full(a, b)
     flips = np.bitwise_xor(s[1:], s[:-1])
     ones = np.unpackbits(flips.view(np.uint8)).sum()
     return float(ones) / (n_vectors - 1) / (spec.n_bits + 1)

@@ -18,7 +18,6 @@ from typing import Dict, Iterable, Optional
 
 import numpy as np
 
-from repro.core.adders import approx_add
 from repro.core.specs import AdderSpec
 
 
@@ -64,8 +63,9 @@ def _random_operands(rng: np.random.Generator, n: int, n_bits: int):
 
 def error_distances(a: np.ndarray, b: np.ndarray, spec: AdderSpec) -> np.ndarray:
     """|approx(a,b) - (a+b)| as int64 (exact for N <= 62)."""
+    from repro.ax import make_engine  # lazy: core loads before repro.ax
     exact = a + b
-    approx = approx_add(a, b, spec)
+    approx = make_engine(spec, backend="numpy").add_full(a, b)
     return np.abs(approx.astype(np.int64) - exact.astype(np.int64))
 
 

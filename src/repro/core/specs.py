@@ -3,6 +3,13 @@
 An :class:`AdderSpec` fully determines the bit-level behaviour of one of the
 static approximate adders studied by the paper (plus the accurate baseline).
 
+The set of legal ``kind`` values — and the per-kind structural constraints
+(minimum LSM width, constant-section headroom) — are derived from the
+adder registry (:mod:`repro.ax.registry`), so adders registered by any
+module validate and enumerate here without edits to core.  ``ALL_KINDS``,
+``TABLE1_KINDS`` and ``CONST_KINDS`` are computed on attribute access
+(PEP 562) and therefore always reflect the live registry.
+
 Paper defaults (Section IV): N=32, m=10 (approximate LSM width), k=5
 (constant-one section width) — "consistent with [15] and [16]".
 """
@@ -23,29 +30,31 @@ HALOC_AXA = "haloc_axa"
 # Bonus baseline from the background section (Zhu et al. [11]).
 ETA = "eta"
 
-ALL_KINDS: Tuple[str, ...] = (
-    ACCURATE,
-    LOA,
-    LOAWA,
-    OLOCA,
-    HERLOA,
-    M_HERLOA,
-    HALOC_AXA,
-    ETA,
-)
+#: Derived from the adder registry on access (see module docstring):
+#:   ALL_KINDS     every registered kind, Table-I order first
+#:   TABLE1_KINDS  kinds compared in the paper's Table I
+#:   CONST_KINDS   kinds whose LSM has a constant-one lower section
+_REGISTRY_DERIVED = ("ALL_KINDS", "TABLE1_KINDS", "CONST_KINDS")
 
-# Kinds whose LSM has a constant-one lower section of width k.
-CONST_KINDS = frozenset({OLOCA, M_HERLOA, HALOC_AXA})
-# Kinds compared in the paper's Table I (everything except ETA).
-TABLE1_KINDS: Tuple[str, ...] = (
-    ACCURATE,
-    LOA,
-    LOAWA,
-    OLOCA,
-    HERLOA,
-    M_HERLOA,
-    HALOC_AXA,
-)
+
+def __getattr__(name: str):
+    if name in _REGISTRY_DERIVED:
+        from repro.ax import registry
+        if name == "ALL_KINDS":
+            return registry.registered_kinds()
+        if name == "TABLE1_KINDS":
+            return registry.table1_kinds()
+        return frozenset(registry.const_kinds())
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _entry(kind: str):
+    """Registry entry for ``kind``; ValueError when unregistered."""
+    from repro.ax.registry import get_adder
+    try:
+        return get_adder(kind)
+    except KeyError:
+        raise ValueError(f"unknown adder kind {kind!r}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +62,12 @@ class AdderSpec:
     """Static approximate adder configuration.
 
     Attributes:
-      kind: one of :data:`ALL_KINDS`.
+      kind: one of :data:`ALL_KINDS` (i.e. any registered adder).
       n_bits: total adder width N (operands are N-bit unsigned; the sum has
         N+1 significant bits).
       lsm_bits: approximate LSM width m. The MSM (exact part) is N-m bits.
-      const_bits: constant-one section width k (only meaningful for OLOCA,
-        M-HERLOA and HALOC-AxA; must be 0 for the others).
+      const_bits: constant-one section width k (only meaningful for kinds
+        registered with ``const_section=True``; ignored for the others).
     """
 
     kind: str
@@ -67,47 +76,50 @@ class AdderSpec:
     const_bits: int = 5
 
     def __post_init__(self):
-        if self.kind not in ALL_KINDS:
-            raise ValueError(f"unknown adder kind {self.kind!r}")
-        if self.kind == ACCURATE:
+        entry = _entry(self.kind)
+        if entry.is_exact:
             return
         if not (1 <= self.lsm_bits <= self.n_bits):
             raise ValueError(
                 f"lsm_bits must be in [1, n_bits]; got m={self.lsm_bits}, "
                 f"N={self.n_bits}"
             )
-        k = self.const_bits if self.kind in CONST_KINDS else 0
+        k = self.const_bits if entry.const_section else 0
         if not (0 <= k <= self.lsm_bits):
             raise ValueError(
                 f"const_bits must be in [0, lsm_bits]; got k={k}, "
                 f"m={self.lsm_bits}"
             )
-        if self.kind in (HERLOA, M_HERLOA, HALOC_AXA) and self.lsm_bits < 2:
-            raise ValueError(f"{self.kind} needs lsm_bits >= 2")
-        if self.kind in (M_HERLOA, HALOC_AXA) and k > self.lsm_bits - 2:
+        if self.lsm_bits < entry.min_lsm_bits:
             raise ValueError(
-                f"{self.kind} needs const_bits <= lsm_bits - 2 "
-                f"(two HA / error-reduction positions); got k={k}, m={self.lsm_bits}"
+                f"{self.kind} needs lsm_bits >= {entry.min_lsm_bits}")
+        if entry.const_margin and k > self.lsm_bits - entry.const_margin:
+            raise ValueError(
+                f"{self.kind} needs const_bits <= lsm_bits - "
+                f"{entry.const_margin} (two HA / error-reduction "
+                f"positions); got k={k}, m={self.lsm_bits}"
             )
 
     @property
     def effective_const_bits(self) -> int:
-        return self.const_bits if self.kind in CONST_KINDS else 0
+        return self.const_bits if _entry(self.kind).const_section else 0
 
     @property
     def msm_bits(self) -> int:
-        return self.n_bits - (0 if self.kind == ACCURATE else self.lsm_bits)
+        return self.n_bits - (0 if _entry(self.kind).is_exact
+                              else self.lsm_bits)
 
     def replace(self, **kw) -> "AdderSpec":
         return dataclasses.replace(self, **kw)
 
     @property
     def short_name(self) -> str:
-        if self.kind == ACCURATE:
-            return f"accurate{self.n_bits}"
+        entry = _entry(self.kind)
+        if entry.is_exact:
+            return f"{self.kind}{self.n_bits}"
         k = self.effective_const_bits
         return f"{self.kind}-n{self.n_bits}m{self.lsm_bits}" + (
-            f"k{k}" if self.kind in CONST_KINDS else ""
+            f"k{k}" if entry.const_section else ""
         )
 
 
@@ -115,9 +127,11 @@ def paper_spec(kind: str, n_bits: int = 32, lsm_bits: int = 10,
                const_bits: int = 5) -> AdderSpec:
     """Spec with the paper's Section-IV parameters (N=32, m=10, k=5)."""
     return AdderSpec(kind=kind, n_bits=n_bits, lsm_bits=lsm_bits,
-                     const_bits=const_bits if kind in CONST_KINDS else 0)
+                     const_bits=const_bits if _entry(kind).const_section
+                     else 0)
 
 
 def table1_specs() -> Tuple[AdderSpec, ...]:
     """The seven adders of the paper's Table I at N=32, m=10, k=5."""
-    return tuple(paper_spec(kind) for kind in TABLE1_KINDS)
+    from repro.ax.registry import table1_kinds
+    return tuple(paper_spec(kind) for kind in table1_kinds())

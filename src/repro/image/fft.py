@@ -26,7 +26,6 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.adders import approx_add
 from repro.core.specs import AdderSpec
 
 TWIDDLE_FRAC = 14
@@ -34,12 +33,24 @@ TWIDDLE_FRAC = 14
 
 @dataclasses.dataclass(frozen=True)
 class FixedFFTConfig:
+    """Transform config: adder spec + data Q-format + execution backend.
+
+    The FFT manages its own (typically 32-bit) fixed-point containers, so
+    the engine is format-free; every butterfly ADD/SUB routes through
+    ``engine.add`` (mod-2^N container semantics)."""
+
     spec: AdderSpec
     frac_bits: int = 6
+    backend: str = "numpy"
 
     @property
     def n_bits(self) -> int:
         return self.spec.n_bits
+
+    @property
+    def engine(self):
+        from repro.ax import make_engine
+        return make_engine(self.spec, backend=self.backend)
 
 
 def _mask(cfg) -> np.uint64:
@@ -61,7 +72,15 @@ def from_fixed(u: np.ndarray, cfg: FixedFFTConfig) -> np.ndarray:
 
 
 def _add(a, b, cfg):
-    return approx_add(a, b, cfg.spec) & _mask(cfg)
+    if cfg.backend == "numpy":
+        return cfg.engine.add(a, b)
+    # jax-family backends have 32-bit lanes: hand them uint32 patterns
+    # (lossless for N <= 32) instead of letting jnp.asarray truncate
+    # uint64 with a per-call UserWarning, and return to the host uint64
+    # container the rest of the FFT expects.
+    assert cfg.n_bits <= 32, "non-numpy FFT backends require n_bits <= 32"
+    s = cfg.engine.add(a.astype(np.uint32), b.astype(np.uint32))
+    return np.asarray(s).astype(np.uint64)
 
 
 def _neg(a, cfg):

@@ -41,7 +41,7 @@ def synthetic_image(size: int = 512, seed: int = 7) -> np.ndarray:
 
 
 def reconstruct(img: np.ndarray, spec: AdderSpec, frac_bits: int = 6,
-                block: int = 16) -> np.ndarray:
+                block: int = 16, backend: str = "numpy") -> np.ndarray:
     """FFT -> IFFT of `img` through the given adder; returns uint8.
 
     The transform runs block-wise (`block` x `block` tiles, vectorized over
@@ -49,8 +49,10 @@ def reconstruct(img: np.ndarray, spec: AdderSpec, frac_bits: int = 6,
     transform tiling or Q-format; (block=16, frac_bits=6) is calibrated so
     the accurate adder is lossless and the six approximate adders land in
     the paper's SSIM bands with the paper's exact quality ORDERING
-    (EXPERIMENTS.md §Image).  block=0 runs one whole-image transform."""
-    cfg = FixedFFTConfig(spec=spec, frac_bits=frac_bits)
+    (EXPERIMENTS.md §Image).  block=0 runs one whole-image transform.
+    ``backend`` names the repro.ax execution backend for every butterfly
+    add (the host simulation default is "numpy")."""
+    cfg = FixedFFTConfig(spec=spec, frac_bits=frac_bits, backend=backend)
     h, w = img.shape
     if block and block < h:
         bs = block
@@ -72,10 +74,10 @@ def reconstruct(img: np.ndarray, spec: AdderSpec, frac_bits: int = 6,
 
 
 def evaluate(img: np.ndarray, specs, frac_bits: int = 6,
-             block: int = 16) -> Dict[str, dict]:
+             block: int = 16, backend: str = "numpy") -> Dict[str, dict]:
     out = {}
     for spec in specs:
-        rec = reconstruct(img, spec, frac_bits, block)
+        rec = reconstruct(img, spec, frac_bits, block, backend=backend)
         out[spec.kind] = {
             "psnr": psnr(img, rec),
             "ssim": ssim(img, rec),

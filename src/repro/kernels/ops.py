@@ -1,64 +1,53 @@
-"""jit'd public wrappers around the Pallas kernels (padding, reshaping,
-interpret-mode selection).
+"""DEPRECATED public wrappers around the Pallas kernels.
 
-On this CPU container `interpret=True` executes the kernel bodies in
-Python for correctness validation; on TPU pass interpret=False to compile
-through Mosaic.
+This module predates ``repro.ax``: its functions threaded raw
+``interpret: bool`` flags and duplicated the pad/reshape plumbing that
+now lives once in :mod:`repro.ax.backends`.  Every wrapper below is a
+thin shim that emits ``DeprecationWarning`` and delegates to the
+``"pallas"`` / ``"pallas_tpu"`` backend — use
+
+    from repro.ax import make_engine
+    ax = make_engine(spec, backend="pallas")     # or "pallas_tpu" on TPU
+    ax.add(a, b); ax.matmul(a, b); ax.butterfly(...)
+
+instead (see MIGRATION.md).
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
+import warnings
 
 from repro.core.specs import AdderSpec
-from repro.kernels.approx_add import approx_add_pallas
-from repro.kernels.approx_matmul import approx_matmul_pallas
-from repro.kernels.butterfly import butterfly_pallas
 
 
-def _pad2(x, bm, bn):
-    m, n = x.shape
-    pm, pn = (-m) % bm, (-n) % bn
-    if pm or pn:
-        x = jnp.pad(x, ((0, pm), (0, pn)))
-    return x, m, n
+def _backend(interpret: bool):
+    from repro.ax.backends import get_backend
+    return get_backend("pallas" if interpret else "pallas_tpu")
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{old} is deprecated; use "
+        f"repro.ax.make_engine(spec, backend='pallas'/'pallas_tpu') "
+        f"(see MIGRATION.md)", DeprecationWarning, stacklevel=3)
+
+
 def approx_add(a, b, spec: AdderSpec, interpret: bool = True):
-    """Elementwise approximate add of two int32 tensors (any shape)."""
-    shape = a.shape
-    flat = a.reshape(-1)
-    size = flat.shape[0]
-    n_cols = 256
-    rows = -(-size // n_cols)
-    ap = jnp.zeros((rows * n_cols,), jnp.int32).at[:size].set(a.reshape(-1))
-    bp = jnp.zeros((rows * n_cols,), jnp.int32).at[:size].set(b.reshape(-1))
-    ap, m0, n0 = _pad2(ap.reshape(rows, n_cols), 256, 256)
-    bp, _, _ = _pad2(bp.reshape(rows, n_cols), 256, 256)
-    out = approx_add_pallas(ap, bp, spec, interpret=interpret)
-    return out[:m0, :n0].reshape(-1)[:size].reshape(shape)
+    """Deprecated shim: elementwise approximate add of two int32 tensors."""
+    _deprecated("approx_add")
+    return _backend(interpret).add(a, b, spec)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
 def approx_matmul(a, b, spec: AdderSpec, block=(128, 128, 128),
                   interpret: bool = True):
-    """int8 (M,K) @ int8 (K,N) -> int32, approximate K-tile accumulation."""
-    bm, bn, bk = block
-    ap, m0, _ = _pad2(a, bm, bk)
-    bp, _, n0 = _pad2(b, bk, bn)
-    out = approx_matmul_pallas(ap, bp, spec, block=block,
-                               interpret=interpret)
-    return out[:m0, :n0]
+    """Deprecated shim: int8 (M,K) @ int8 (K,N) -> int32 approximate GEMM."""
+    _deprecated("approx_matmul")
+    return _backend(interpret).matmul(a, b, spec, block=tuple(block))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("spec", "inverse", "interpret"))
 def butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
               inverse: bool = False, interpret: bool = True):
-    """One radix-2 butterfly stage; all int32 (rows, half) + (half,)."""
-    return butterfly_pallas(a_re, a_im, b_re, b_im, w_re, w_im, spec,
-                            inverse=inverse, interpret=interpret)
+    """Deprecated shim: one radix-2 butterfly stage (int32 planes)."""
+    _deprecated("butterfly")
+    return _backend(interpret).butterfly(a_re, a_im, b_re, b_im, w_re, w_im,
+                                         spec, inverse=inverse)

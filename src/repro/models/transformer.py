@@ -10,7 +10,8 @@ whose leaves carry a leading `repeats` axis, consumed by `lax.scan`.
 
 The paper's technique enters through `cfg.approx`: when enabled, both
 residual-stream adds of every block run through the configured approximate
-adder in fixed point (numerics.approx_residual_add, STE gradients).
+adder in fixed point (cfg.approx.residual_add -> repro.ax engine, STE
+gradients).
 """
 
 from __future__ import annotations
@@ -31,7 +32,6 @@ from repro.models.config import (
     ATTN, CROSS, GELU, MLA, MOE, NONE, RGLRU, SSD, SWIGLU,
     BlockSpec, ModelConfig,
 )
-from repro.numerics.approx_ops import approx_residual_add
 
 Params = Dict[str, Any]
 
@@ -180,7 +180,7 @@ def block_apply(p: Params, cfg: ModelConfig, spec: BlockSpec, x, ctx,
     else:
         raise ValueError(spec.mixer)
 
-    x = approx_residual_add(x, mix.astype(x.dtype), cfg.approx)
+    x = cfg.approx.residual_add(x, mix.astype(x.dtype))
     aux = jnp.zeros((), jnp.float32)
     if spec.mlp != NONE:
         h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
@@ -197,7 +197,7 @@ def block_apply(p: Params, cfg: ModelConfig, spec: BlockSpec, x, ctx,
             out = L.gelu_mlp(p["mlp"], h2)
         if spec.mixer == CROSS:
             out = jnp.tanh(p["gate_mlp"]).astype(out.dtype) * out
-        x = approx_residual_add(x, out.astype(x.dtype), cfg.approx)
+        x = cfg.approx.residual_add(x, out.astype(x.dtype))
     return x, new_cache, aux
 
 

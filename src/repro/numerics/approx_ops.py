@@ -1,47 +1,42 @@
-"""Approximate arithmetic ops built on the paper's adders.
-
-These are the integration points the rest of the framework uses:
-
-- :func:`approx_add_signed` — two's-complement fixed-point add through a
-  configured approximate adder (bit-exact emulation).
-- :func:`approx_residual_add` — float-in/float-out residual-stream add:
-  quantize -> approximate add -> dequantize, with a straight-through
-  estimator so the op is trainable (gradient of an exact add).
-- :func:`approx_sum` — tree reduction with approximate partial sums (the
-  accumulation pattern a MAC ASIC built from these adders would exhibit).
+"""Model-facing configuration for the paper's approximate arithmetic.
 
 ``ApproxNumericsConfig`` is the user-facing knob carried by every model
-config (``--approx-adder haloc_axa --approx-where residual``).
+config (``--approx-adder haloc_axa --approx-where residual``).  It is a
+thin wrapper over a :class:`repro.ax.AxEngine`: the config names the
+adder/format/backend; the engine executes.  Model layers call
+``cfg.residual_add(x, y)`` and never touch spec/format/backend plumbing.
+
+The module-level functions (:func:`approx_add_signed`,
+:func:`approx_residual_add`, :func:`approx_sum`) are the pre-``repro.ax``
+entry points, kept as deprecation shims that delegate to an engine —
+new code should call the engine methods directly (see MIGRATION.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.adders import approx_add_mod
 from repro.core.specs import ACCURATE, AdderSpec
-from repro.numerics.fixed_point import (
-    FixedPointFormat,
-    container_to_signed,
-    dequantize,
-    quantize,
-    signed_to_container,
-)
+from repro.numerics.fixed_point import FixedPointFormat
+
+
+def _engine(spec: AdderSpec, fmt: FixedPointFormat, backend, fast: bool):
+    # Lazy: repro.ax.engine imports this package at load time.
+    from repro.ax import make_engine
+    return make_engine(spec, fmt=fmt, backend=backend, fast=fast)
 
 
 @dataclasses.dataclass(frozen=True)
 class ApproxNumericsConfig:
     """How the paper's adder is deployed inside a model.
 
-    where: "off" | "residual" (residual-stream adds) | "residual+logits".
-    fmt:   fixed-point format of the approximate dataflow.
-    spec:  the adder (paper default: HALOC-AxA at a 16-bit datapath uses
-           m=8, k=4 — the paper's own Fig-4 scaling of N=32,m=10,k=5).
+    where:   "off" | "residual" (residual-stream adds) | "residual+logits".
+    fmt:     fixed-point format of the approximate dataflow.
+    spec:    the adder (paper default: HALOC-AxA at a 16-bit datapath uses
+             m=8, k=4 — the paper's own Fig-4 scaling of N=32,m=10,k=5).
+    backend: execution backend name (see repro.ax.available_backends).
     """
 
     spec: AdderSpec = AdderSpec(kind=ACCURATE)
@@ -50,6 +45,7 @@ class ApproxNumericsConfig:
     # algebraically-fused emulation (bit-identical; fewer vector ops) —
     # OFF for the paper-faithful baseline, flipped in §Perf iterations.
     fast: bool = False
+    backend: str = "jax"
 
     def __post_init__(self):
         if self.where not in ("off", "residual", "residual+logits"):
@@ -64,66 +60,84 @@ class ApproxNumericsConfig:
     def enabled(self) -> bool:
         return self.where != "off" and self.spec.kind != ACCURATE
 
+    @property
+    def engine(self):
+        """The cached :class:`repro.ax.AxEngine` this config names."""
+        return _engine(self.spec, self.fmt, self.backend, self.fast)
+
+    def residual_add(self, x, y):
+        """Residual-stream add; exact float add when the config is off."""
+        if not self.enabled:
+            return x + y
+        return self.engine.residual_add(x, y)
+
+
+def make_numerics(adder: str = "accurate", where: str = "off",
+                  n_bits: int = 16, frac_bits: int = 8,
+                  lsm_bits: Optional[int] = None,
+                  const_bits: Optional[int] = None,
+                  fast: bool = False,
+                  backend: str = "jax") -> ApproxNumericsConfig:
+    """Convenience constructor used by model configs / CLI flags.
+
+    Defaults scale the paper's 32-bit (m=10, k=5) partition to the 16-bit
+    activation datapath: m=8, k=4 (the paper's own Fig-4 example uses
+    exactly this N=16/m=8/k=4 split).
+    """
+    from repro.ax.registry import get_adder
+    if adder == ACCURATE or where == "off":
+        return ApproxNumericsConfig(where="off")
+    try:
+        const_section = get_adder(adder).const_section
+    except KeyError:
+        raise ValueError(f"unknown adder kind {adder!r}") from None
+    m = lsm_bits if lsm_bits is not None else max(2, n_bits // 2)
+    k = const_bits if const_bits is not None else m // 2
+    spec = AdderSpec(kind=adder, n_bits=n_bits, lsm_bits=m,
+                     const_bits=k if const_section else 0)
+    return ApproxNumericsConfig(
+        spec=spec, fmt=FixedPointFormat(n_bits, frac_bits), where=where,
+        fast=fast, backend=backend)
+
+
+# ------------------------------------------------- deprecated entry points --
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.numerics.approx_ops.{old} is deprecated; use {new} "
+        f"(see MIGRATION.md)", DeprecationWarning, stacklevel=3)
+
 
 def approx_add_signed(qx, qy, spec: AdderSpec, fmt: FixedPointFormat,
                       fast: bool = False):
-    """Two's-complement fixed-point add via the approximate adder.
+    """Deprecated shim for ``make_engine(spec, fmt=fmt).add_signed``.
 
-    Inputs/outputs are signed int32 containers holding Q-format values.
-    Overflow wraps modulo 2^N — exactly like the hardware adder.
+    Two's-complement fixed-point add via the approximate adder: inputs
+    and outputs are signed int32 containers holding Q-format values, and
+    overflow wraps modulo 2^N — exactly like the hardware adder.
+    Preserves the old array-type contract: numpy in -> numpy out.
     """
-    a = signed_to_container(qx, fmt)
-    b = signed_to_container(qy, fmt)
-    s = approx_add_mod(a, b, spec, fast=fast)
-    return container_to_signed(s, fmt)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _ste_residual_add(x, y, spec: AdderSpec, fmt: FixedPointFormat,
-                      fast: bool = False):
-    qx, qy = quantize(x, fmt), quantize(y, fmt)
-    return dequantize(approx_add_signed(qx, qy, spec, fmt, fast=fast),
-                      fmt, x.dtype)
-
-
-def _ste_fwd(x, y, spec, fmt, fast):
-    return _ste_residual_add(x, y, spec, fmt, fast), None
-
-
-def _ste_bwd(spec, fmt, fast, _res, g):
-    # Straight-through: d(approx_add)/dx ~= d(x+y)/dx = 1.
-    return g, g
-
-
-_ste_residual_add.defvjp(_ste_fwd, _ste_bwd)
+    import numpy as np
+    _deprecated("approx_add_signed", "AxEngine.add_signed")
+    backend = "numpy" if isinstance(qx, np.ndarray) else "jax"
+    return _engine(spec, fmt, backend, fast).add_signed(qx, qy)
 
 
 def approx_residual_add(x, y, cfg: ApproxNumericsConfig):
-    """Residual-stream add; exact float add when the config is off."""
-    if not cfg.enabled:
-        return x + y
-    return _ste_residual_add(x, y, cfg.spec, cfg.fmt, cfg.fast)
+    """Deprecated shim for ``cfg.residual_add`` /
+    ``AxEngine.residual_add``."""
+    _deprecated("approx_residual_add", "ApproxNumericsConfig.residual_add")
+    return cfg.residual_add(x, y)
 
 
 def approx_sum(q, spec: AdderSpec, fmt: FixedPointFormat, axis: int = -1):
-    """Tree reduction of signed fixed-point values with approximate adds.
+    """Deprecated shim for ``make_engine(spec, fmt=fmt).sum``.
 
-    Models the accumulator of an AxA MAC array: partial sums are combined
-    pairwise through the approximate adder (log-depth tree, matching a
-    reduction-tree ASIC rather than a serial chain).
+    Tree reduction of signed fixed-point values with approximate adds
+    (log-depth tree, matching a reduction-tree ASIC accumulator).
     """
-    q = jnp.moveaxis(q, axis, -1)
-    n = q.shape[-1]
-    # Pad to a power of two with zeros (0 is the additive identity of every
-    # adder in the family up to the constant-1 tail, handled below).
-    pow2 = 1 << (n - 1).bit_length()
-    if pow2 != n:
-        pad = [(0, 0)] * (q.ndim - 1) + [(0, pow2 - n)]
-        q = jnp.pad(q, pad)
-    while q.shape[-1] > 1:
-        half = q.shape[-1] // 2
-        q = approx_add_signed(q[..., :half], q[..., half:], spec, fmt)
-    return q[..., 0]
+    _deprecated("approx_sum", "AxEngine.sum")
+    return _engine(spec, fmt, "jax", False).sum(q, axis=axis)
 
 
 def effective_lsb_bias(spec: AdderSpec) -> float:
@@ -136,25 +150,3 @@ def effective_lsb_bias(spec: AdderSpec) -> float:
     """
     k = spec.effective_const_bits
     return float((1 << k) - 1) / 2.0 if k else 0.0
-
-
-def make_numerics(adder: str = "accurate", where: str = "off",
-                  n_bits: int = 16, frac_bits: int = 8,
-                  lsm_bits: Optional[int] = None,
-                  const_bits: Optional[int] = None,
-                  fast: bool = False) -> ApproxNumericsConfig:
-    """Convenience constructor used by model configs / CLI flags.
-
-    Defaults scale the paper's 32-bit (m=10, k=5) partition to the 16-bit
-    activation datapath: m=8, k=4 (the paper's own Fig-4 example uses
-    exactly this N=16/m=8/k=4 split).
-    """
-    if adder == ACCURATE or where == "off":
-        return ApproxNumericsConfig(where="off")
-    m = lsm_bits if lsm_bits is not None else max(2, n_bits // 2)
-    k = const_bits if const_bits is not None else m // 2
-    spec = AdderSpec(kind=adder, n_bits=n_bits, lsm_bits=m, const_bits=k
-                     if adder in ("oloca", "m_herloa", "haloc_axa") else 0)
-    return ApproxNumericsConfig(
-        spec=spec, fmt=FixedPointFormat(n_bits, frac_bits), where=where,
-        fast=fast)

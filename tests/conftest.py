@@ -1,0 +1,11 @@
+"""Test bootstrap: put ``src/`` (and the repo root, for ``benchmarks.*``)
+on ``sys.path`` so ``python -m pytest -q`` works from a clean checkout
+without the ``PYTHONPATH=src`` incantation."""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for path in (os.path.join(_ROOT, "src"), _ROOT):
+    if path not in sys.path:
+        sys.path.insert(0, path)
