@@ -1,0 +1,33 @@
+"""imgproc corpus benchmark: {Table-I adder kinds} x {batched image
+operators} on a synthetic batch, scored against the ideal float
+references (PSNR/SSIM + warm-call throughput).
+
+``--quick`` (via benchmarks/run.py) shrinks the batch; standalone runs
+use a 8 x 128 x 128 batch.  The FFT reconstruction workload is covered
+separately by fig5_image.py, so it is excluded here.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.imgproc import format_table, run_corpus, synthetic_batch
+
+
+def run(n_images: int = 8, size: int = 128, backend: str = "jax",
+        fast: bool = False) -> List[str]:
+    batch = synthetic_batch(n_images, size)
+    rows = run_corpus(batch=batch, backend=backend, fast=fast)
+    print(f"\n== imgproc corpus ({n_images} x {size}x{size}, "
+          f"backend={backend}) — PSNR dB / SSIM ==")
+    print(format_table(rows))
+    slowest = min(rows, key=lambda r: r.mpix_per_s)
+    fastest = max(rows, key=lambda r: r.mpix_per_s)
+    print(f"throughput: {fastest.workload}/{fastest.kind} "
+          f"{fastest.mpix_per_s:.1f} MPix/s ... {slowest.workload}/"
+          f"{slowest.kind} {slowest.mpix_per_s:.1f} MPix/s")
+    return [r.csv() for r in rows]
+
+
+if __name__ == "__main__":
+    run()

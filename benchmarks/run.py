@@ -11,13 +11,15 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import (bench_kernels, fig5_image, fig6_tradeoff,
-                            roofline, table1_error, table1_hw)
+    from benchmarks import (bench_imgproc, bench_kernels, fig5_image,
+                            fig6_tradeoff, roofline, table1_error, table1_hw)
     lines = []
     lines += table1_hw.run()
     lines += table1_error.run(n_samples=1_000_000 if quick else 10_000_000)
     lines += fig5_image.run(size=256 if quick else 512)
     lines += fig6_tradeoff.run(size=256)
+    lines += bench_imgproc.run(n_images=4 if quick else 8,
+                               size=64 if quick else 128)
     lines += bench_kernels.run()
     lines += roofline.run()
     print("\n== CSV (name,us_per_call,derived) ==")

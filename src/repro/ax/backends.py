@@ -58,6 +58,19 @@ class Backend:
             f"backend {self.name!r} has no full-width add; use the "
             f"'numpy' backend for error analysis")
 
+    def accumulate(self, terms, spec: AdderSpec, *, weights=None,
+                   fast: bool = False):
+        """Weighted K-term fold through the approximate adder, mod 2^N,
+        in ONE dispatch.
+
+        ``terms`` stacks K N-bit container arrays on axis 0; ``weights``
+        are K static Python ints applied as *exact* multiplies (mod 2^N —
+        the hardware's tap multipliers are not approximated) before the
+        K-1 approximate adds.  This is the image-filter / FIR primitive:
+        the unfused equivalent is K-1 separate ``add`` dispatches with
+        K-2 materialized intermediates."""
+        raise NotImplementedError
+
     def matmul(self, a, b, spec: AdderSpec, *, block=(128, 128, 128),
                fast: bool = False):
         """int8 (M,K) @ int8 (K,N) -> int32 with exact per-K-tile dots and
@@ -76,6 +89,13 @@ class Backend:
 
 # ------------------------------------------------------------------ numpy --
 
+def _norm_weights(weights, k: int):
+    ws = tuple(weights) if weights is not None else (1,) * k
+    if len(ws) != k:
+        raise ValueError(f"{len(ws)} weights for {k} stacked terms")
+    return ws
+
+
 class NumpyBackend(Backend):
     """Host behavioral simulation: uint64 containers, vectorized numpy."""
 
@@ -83,6 +103,24 @@ class NumpyBackend(Backend):
 
     def add(self, a, b, spec, *, fast=False):
         return approx_add_mod(np.asarray(a), np.asarray(b), spec, fast=fast)
+
+    def accumulate(self, terms, spec, *, weights=None, fast=False):
+        t = np.asarray(terms)
+        ws = _norm_weights(weights, t.shape[0])
+        width = 8 * t.dtype.itemsize
+        acc = None
+        for i, w in enumerate(ws):
+            # w mod 2^N is non-negative and fits the container dtype; the
+            # container's natural wraparound preserves mod-2^N, so only
+            # N < container width needs an explicit mask.
+            term = t[i]
+            if w != 1:
+                term = term * t.dtype.type(w % (1 << spec.n_bits))
+                if spec.n_bits < width:
+                    term = term & t.dtype.type((1 << spec.n_bits) - 1)
+            acc = term if acc is None else approx_add_mod(acc, term, spec,
+                                                          fast=fast)
+        return acc
 
     def add_full(self, a, b, spec, *, fast=False):
         return approx_add(np.asarray(a), np.asarray(b), spec, fast=fast)
@@ -117,6 +155,17 @@ def _like(x, ref_dtype):
 def _jax_add(a, b, spec: AdderSpec, fast: bool):
     s = approx_add_mod(_as_u32(a), _as_u32(b), spec, fast=fast)
     return _like(s, a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "weights", "fast"))
+def _jax_accumulate(terms, spec: AdderSpec, weights, fast: bool):
+    from repro.kernels.accumulate import scale_mod_u32
+    acc = None
+    for i, w in enumerate(weights):
+        term = scale_mod_u32(_as_u32(terms[i]), w, spec.n_bits)
+        acc = term if acc is None else approx_add_mod(acc, term, spec,
+                                                      fast=fast)
+    return _like(acc, terms.dtype)
 
 
 def _mul_q14(x, w):
@@ -166,6 +215,11 @@ class JaxBackend(Backend):
     def add(self, a, b, spec, *, fast=False):
         return _jax_add(jnp.asarray(a), jnp.asarray(b), spec, fast)
 
+    def accumulate(self, terms, spec, *, weights=None, fast=False):
+        terms = jnp.asarray(terms)
+        return _jax_accumulate(terms, spec,
+                               _norm_weights(weights, terms.shape[0]), fast)
+
     def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
         return _jax_matmul(jnp.asarray(a), jnp.asarray(b), spec,
                            tuple(block), fast)
@@ -189,6 +243,17 @@ def _pad2(x, bm, bn):
     return x, m, n
 
 
+def _as_tiles(x, size: int, n_cols: int = 256):
+    """Flatten an elementwise operand (last ``size`` elements per lead
+    dim) to a (rows, n_cols) tile grid with ONE pad — rows kept a
+    multiple of the 256-row block above one block."""
+    rows = -(-size // n_cols)
+    if rows > 256:
+        rows = -(-rows // 256) * 256
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rows * n_cols - size)]
+    return jnp.pad(x, pad).reshape(x.shape[:-1] + (rows, n_cols))
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "interpret", "fast"))
 def _pallas_elementwise_add(a, b, spec: AdderSpec, interpret: bool,
                             fast: bool):
@@ -199,14 +264,26 @@ def _pallas_elementwise_add(a, b, spec: AdderSpec, interpret: bool,
     del fast  # the kernel body is the fused form already
     shape = a.shape
     size = int(np.prod(shape)) if shape else 1
-    n_cols = 256
-    rows = -(-size // n_cols)
-    if rows > 256:  # keep rows a multiple of the 256-row block
-        rows = -(-rows // 256) * 256
-    pad = rows * n_cols - size
-    ap = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows, n_cols)
-    bp = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows, n_cols)
+    ap = _as_tiles(a.reshape(-1), size)
+    bp = _as_tiles(b.reshape(-1), size)
     out = approx_add_pallas(ap, bp, spec, interpret=interpret)
+    return out.reshape(-1)[:size].reshape(shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "weights", "interpret", "fast"))
+def _pallas_accumulate(terms, spec: AdderSpec, weights, interpret: bool,
+                       fast: bool):
+    """Tile plumbing for the fused K-term kernel: flatten the trailing
+    dims to a (rows, 256) grid with ONE pad of the stacked operand, run
+    the kernel, slice back."""
+    from repro.kernels.accumulate import accumulate_pallas
+    del fast  # the kernel body folds the fused adder form already
+    k = terms.shape[0]
+    shape = terms.shape[1:]
+    size = int(np.prod(shape)) if shape else 1
+    tp = _as_tiles(terms.reshape(k, -1), size)
+    out = accumulate_pallas(tp, spec, weights=weights, interpret=interpret)
     return out.reshape(-1)[:size].reshape(shape)
 
 
@@ -231,6 +308,12 @@ class PallasBackend(Backend):
     def add(self, a, b, spec, *, fast=False):
         return _pallas_elementwise_add(jnp.asarray(a), jnp.asarray(b), spec,
                                        self.interpret, fast)
+
+    def accumulate(self, terms, spec, *, weights=None, fast=False):
+        terms = jnp.asarray(terms)
+        return _pallas_accumulate(terms, spec,
+                                  _norm_weights(weights, terms.shape[0]),
+                                  self.interpret, fast)
 
     def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
         return _pallas_matmul(jnp.asarray(a), jnp.asarray(b), spec,

@@ -23,6 +23,7 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.ax.backends import Backend, get_backend
 from repro.ax.registry import get_adder
@@ -64,6 +65,14 @@ class AxEngine:
         """Full (N+1)-bit unsigned sum (host error analysis; numpy)."""
         return self.backend.add_full(a, b, self.spec, fast=self.fast)
 
+    def accumulate(self, terms, weights=None):
+        """Weighted fold of K stacked container terms mod 2^N in one
+        backend dispatch (one fused kernel on the Pallas backends, not
+        K-1 sequential ``add`` calls).  ``weights`` are K static ints,
+        multiplied exactly before the K-1 approximate adds."""
+        return self.backend.accumulate(terms, self.spec, weights=weights,
+                                       fast=self.fast)
+
     # --------------------------------------------------------- fixed point
 
     def add_signed(self, qx, qy):
@@ -72,6 +81,28 @@ class AxEngine:
         a = signed_to_container(qx, fmt)
         b = signed_to_container(qy, fmt)
         return container_to_signed(self.add(a, b), fmt)
+
+    def accumulate_signed(self, qs, weights=None, shift: int = 0):
+        """Signed fixed-point weighted accumulation: ``sum_i w_i * q_i``
+        with exact tap multiplies, approximate adds, and an exact final
+        rounding right-shift (the filter's normalization stage).
+
+        ``qs`` stacks K signed int32 containers on axis 0.  The true
+        weighted sum must fit the N-bit two's-complement range (headroom
+        is the caller's filter design, exactly as in the hardware)."""
+        fmt = self._require_fmt("accumulate_signed")
+        u = signed_to_container(qs, fmt)
+        s = container_to_signed(self.accumulate(u, weights), fmt)
+        if shift:
+            s = (s + (1 << (shift - 1))) >> shift
+        return s
+
+    def scaled_add(self, qx, qy, wx: int = 1, wy: int = 1, shift: int = 0):
+        """Two-term weighted fixed-point add, ``(wx*qx + wy*qy) >> shift``
+        with a single approximate add (alpha-blend / unsharp-mask tap)."""
+        xp = np if isinstance(qx, np.ndarray) else jnp
+        return self.accumulate_signed(xp.stack([qx, qy]), (wx, wy),
+                                      shift=shift)
 
     def sum(self, q, axis: int = -1):
         """Log-depth tree reduction with approximate partial sums (the

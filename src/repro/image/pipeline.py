@@ -1,6 +1,14 @@
 """Image reconstruction pipeline (paper Fig 5): FFT -> IFFT with
 approximate adders; PSNR/SSIM against the source image.
 
+This transform is no longer the repo's only image workload: it is
+registered as the ``"fft_reconstruct"`` workload of the
+:mod:`repro.imgproc` subsystem, alongside the batched spatial operators
+(blur/sharpen/sobel/blend/...), and the corpus runner
+(``repro.imgproc.run_corpus(include_fft=True)``) sweeps it with the
+rest.  The functions below remain the implementation that workload
+delegates to.
+
 The paper's 512x512 test image ([18], imageprocessingplace.com) is not
 redistributable offline, so `synthetic_image` builds a deterministic
 512x512 8-bit image with comparable content classes: smooth shading,

@@ -1,0 +1,61 @@
+"""``repro.imgproc`` — the batched approximate image-processing workload
+subsystem.
+
+The paper's headline demonstration is deployment of the adder for image
+processing; this package is that demonstration at workload breadth: a
+library of jit/vmap-batched image operators whose every addition routes
+through a :mod:`repro.ax` engine (fused multi-operand accumulation — one
+Pallas tile kernel per filter pass, not K elementwise dispatches), a
+workload registry that also hosts the FFT->IFFT reconstruction formerly
+one-off in ``repro.image.pipeline``, and a corpus runner that sweeps
+{adder kinds} x {operators} x {image batch} into PSNR/SSIM/throughput
+tables (``benchmarks/bench_imgproc.py``).
+
+    from repro.imgproc import make_image_engine, box_blur, run_corpus
+
+    ax = make_image_engine("haloc_axa", backend="jax")
+    out = box_blur(img, ax)                   # every add is approximate
+    rows = run_corpus()                       # the full breadth sweep
+"""
+
+from __future__ import annotations
+
+from repro.imgproc.corpus import (  # noqa: F401
+    CorpusResult,
+    format_table,
+    run_corpus,
+    synthetic_batch,
+)
+from repro.imgproc.ops import (  # noqa: F401
+    IMAGE_N_BITS,
+    OPERATORS,
+    ImageOp,
+    blend,
+    box_blur,
+    brightness,
+    downsample2x,
+    gaussian_blur,
+    get_operator,
+    img_add,
+    make_image_engine,
+    operator_names,
+    register_operator,
+    sharpen,
+    sobel,
+)
+from repro.imgproc.workloads import (  # noqa: F401
+    WORKLOADS,
+    Workload,
+    get_workload,
+    register_workload,
+    workload_names,
+)
+
+__all__ = [
+    "CorpusResult", "IMAGE_N_BITS", "ImageOp", "OPERATORS", "WORKLOADS",
+    "Workload", "blend", "box_blur", "brightness", "downsample2x",
+    "format_table", "gaussian_blur", "get_operator", "get_workload",
+    "img_add", "make_image_engine", "operator_names", "register_operator",
+    "register_workload", "run_corpus", "sharpen", "sobel",
+    "synthetic_batch", "workload_names",
+]

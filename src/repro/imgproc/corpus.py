@@ -1,0 +1,137 @@
+"""Corpus runner: sweep {adder kinds} x {workloads} x {image batch}.
+
+The breadth pass the related surveys run (many kernels, not one
+transform): every registered workload is applied to a batch of
+synthetic images for every requested adder kind in one jitted, vmapped
+batched pass per (kind, workload) cell, and scored against the ideal
+float reference with PSNR/SSIM plus measured throughput.
+
+    from repro.imgproc import run_corpus, format_table
+    rows = run_corpus()            # TABLE1_KINDS x batched workloads
+    print(format_table(rows))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ax import default_backend_name
+from repro.image.pipeline import synthetic_image
+from repro.image.quality import psnr, quality_band, ssim
+from repro.imgproc.workloads import get_workload, workload_names
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusResult:
+    """One (adder kind, workload) cell of the sweep."""
+
+    kind: str
+    workload: str
+    psnr: float          # mean over the batch, dB (inf when lossless)
+    ssim: float          # mean over the batch
+    band: str            # the paper's SSIM quality band
+    mpix_per_s: float    # warm-call throughput, input megapixels / s
+    seconds: float       # warm-call wall time for the whole batch
+
+    def csv(self) -> str:
+        return (f"imgproc/{self.workload}/{self.kind},"
+                f"{self.seconds * 1e6:.0f},"
+                f"PSNR={self.psnr:.2f};SSIM={self.ssim:.4f};"
+                f"MPix/s={self.mpix_per_s:.2f};band={self.band}")
+
+
+def synthetic_batch(n_images: int = 4, size: int = 64,
+                    seed: int = 0) -> np.ndarray:
+    """(B, H, W) uint8 batch of distinct deterministic synthetic images
+    (the pipeline's content classes, different seeds per image)."""
+    return np.stack([synthetic_image(size, seed=seed + 7 * i)
+                     for i in range(n_images)])
+
+
+def _score(ref: np.ndarray, out: np.ndarray) -> Tuple[float, float]:
+    ps = [psnr(r, o) for r, o in zip(ref, out)]
+    ss = [ssim(r, o) for r, o in zip(ref, out)]
+    return float(np.mean(ps)), float(np.mean(ss))
+
+
+def run_corpus(kinds: Optional[Sequence[str]] = None,
+               workloads: Optional[Sequence[str]] = None,
+               batch: Optional[np.ndarray] = None,
+               n_images: int = 4, size: int = 64, seed: int = 0,
+               backend: Optional[str] = "jax", fast: bool = False,
+               include_fft: bool = False,
+               workload_kw: Optional[dict] = None) -> List[CorpusResult]:
+    """Sweep ``kinds`` x ``workloads`` over one image batch.
+
+    Defaults: the paper's Table-I kinds, every batched (operator)
+    workload, a 4-image 64x64 synthetic batch, the jax backend.  The
+    host-side FFT reconstruction workload joins only with
+    ``include_fft=True`` (it is orders of magnitude slower).  Cells on
+    a jitted backend run twice and the second (warm, jit-cached) call
+    is timed; host-numpy cells have no cache to warm and run once.
+
+    ``workload_kw`` maps a workload name to extra kwargs for that
+    workload only (e.g. ``{"blend": {"alpha": 0.25}}``), so per-workload
+    options never leak into the other cells of the sweep."""
+    from repro.core.specs import TABLE1_KINDS
+    kinds = tuple(kinds) if kinds is not None else tuple(TABLE1_KINDS)
+    if workloads is None:
+        workloads = workload_names(batched_only=not include_fft)
+    if batch is None:
+        batch = synthetic_batch(n_images, size, seed)
+    workload_kw = workload_kw or {}
+    unknown = set(workload_kw) - set(workloads)
+    if unknown:
+        raise ValueError(f"workload_kw for workloads not in this sweep: "
+                         f"{sorted(unknown)}")
+    rows: List[CorpusResult] = []
+    pixels = batch.size
+    for name in workloads:
+        wl = get_workload(name)
+        kw = workload_kw.get(name, {})
+        ref = wl.reference(batch, **kw)
+        # The backend this workload will actually resolve: operator
+        # workloads auto-detect, the host FFT defaults to numpy.
+        if backend is not None:
+            resolved = backend if isinstance(backend, str) else backend.name
+        else:
+            resolved = default_backend_name() if wl.batched else "numpy"
+        for kind in kinds:
+            if resolved != "numpy":
+                # Compile warm-up; the jit caches are keyed by spec and
+                # shape, so one batch warms batched workloads and a
+                # single image suffices for per-image host loops.
+                warm = batch if wl.batched else batch[:1]
+                wl.run(warm, kind=kind, backend=backend, fast=fast, **kw)
+            t0 = time.perf_counter()
+            out = wl.run(batch, kind=kind, backend=backend, fast=fast,
+                         **kw)
+            dt = time.perf_counter() - t0
+            p, s = _score(ref, np.asarray(out))
+            rows.append(CorpusResult(
+                kind=kind, workload=name, psnr=p, ssim=s,
+                band=quality_band(s), mpix_per_s=pixels / dt / 1e6,
+                seconds=dt))
+    return rows
+
+
+def format_table(rows: Sequence[CorpusResult]) -> str:
+    """Human-readable kind x workload table (PSNR dB / SSIM)."""
+    kinds = list(dict.fromkeys(r.kind for r in rows))
+    names = list(dict.fromkeys(r.workload for r in rows))
+    cell = {(r.kind, r.workload): r for r in rows}
+    width = max(12, max(len(n) for n in names) + 1)
+    lines = ["".join([f"{'adder':12s}"]
+                     + [f"{n:>{width}s}" for n in names])]
+    for k in kinds:
+        row = [f"{k:12s}"]
+        for n in names:
+            r = cell.get((k, n))
+            row.append(" " * width if r is None else
+                       f"{min(r.psnr, 99.0):5.1f}/{r.ssim:.3f}".rjust(width))
+        lines.append("".join(row))
+    return "\n".join(lines)

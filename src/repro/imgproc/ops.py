@@ -1,0 +1,253 @@
+"""Batched approximate image operators on the ``repro.ax`` engines.
+
+Each operator is the fixed-point dataflow an image-processing ASIC built
+from the paper's adders would run: pixels are quantized to a Q16.f
+format (the N=16 datapath is the paper's own Fig-4 instance of the
+(m, k) partition rule: m=8, k=4), filter taps are applied as *exact*
+integer multiplies, and **every addition** — the accumulation loop of
+the separable filters, the blend, the gradient-magnitude merge — routes
+through one :class:`~repro.ax.engine.AxEngine` dispatch via the fused
+multi-operand :meth:`~repro.ax.engine.AxEngine.accumulate_signed` /
+:meth:`~repro.ax.engine.AxEngine.scaled_add` primitives (a single
+Pallas tile kernel on the Pallas backends, not K-1 elementwise calls).
+
+Per-operator fractional widths are chosen so the true weighted sum of
+every accumulation stays inside the 16-bit two's-complement range
+(headroom analysis in each docstring) — exactly the filter designer's
+job in the hardware.
+
+Operators accept ``(..., H, W)`` arrays in [0, 255] (uint8 or float);
+leading batch dims are free, and each operator is a pure jax function
+of its image arguments, so ``jax.vmap`` / ``jax.jit`` compose.  Ideal
+float references live in :mod:`repro.imgproc.reference`; the corpus
+runner (:mod:`repro.imgproc.corpus`) scores every registered adder kind
+against them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.ax.engine import AxEngine, make_engine
+from repro.core.specs import AdderSpec
+from repro.imgproc import reference
+from repro.numerics.fixed_point import FixedPointFormat, dequantize, quantize
+
+#: Default image datapath width: the paper's N=16 (m=8, k=4) instance.
+IMAGE_N_BITS = 16
+
+_F_ADD = 6     # Q16.6: |a + b| <= 510        -> 510 * 64  = 32640 < 2^15
+_F_SEP = 3     # Q16.3: 3x3 box sum <= 2295   -> 2295 * 8  = 18360 < 2^15
+_F_SOBEL = 2   # Q16.2: |smoothed diff| <= 2040 -> 2040 * 4 * 2 = 16320
+_F_DOWN = 4    # Q16.4: 2x2 sum <= 1020       -> 1020 * 16 = 16320 < 2^15
+_F_BRIGHT = 2  # Q16.2: coarse split so the LSM error is not sub-LSB
+_ALPHA_BITS = 6
+
+
+def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
+                      backend=None, fast: bool = False,
+                      n_bits: int = IMAGE_N_BITS) -> AxEngine:
+    """Engine for the image datapath.
+
+    A bare kind name gets the paper's scaled partition at ``n_bits``
+    (m = n/2, k = m/2 — the Fig-4 example at N=16).  The format's
+    fractional split is re-derived per operator, so only the width
+    matters here."""
+    if isinstance(kind, AdderSpec):
+        n_bits = kind.n_bits
+    if not (2 <= n_bits <= 30):
+        raise ValueError(
+            f"the imgproc datapath runs in int32 fixed-point containers "
+            f"and needs n_bits <= 30; got N={n_bits}.  (The N=32 paper "
+            f"spec belongs to the FFT pipeline; the image operators use "
+            f"the paper's Fig-4 N=16 instance by default.)")
+    return make_engine(kind, fmt=FixedPointFormat(n_bits, 0),
+                       backend=backend, fast=fast)
+
+
+def _with_frac(ax: AxEngine, frac_bits: int) -> AxEngine:
+    """The cached engine with the operator's Q-format split."""
+    return make_engine(ax.spec,
+                       fmt=FixedPointFormat(ax.spec.n_bits, frac_bits),
+                       backend=ax.backend, fast=ax.fast)
+
+
+def _q(img, fmt: FixedPointFormat):
+    return quantize(jnp.asarray(img, jnp.float32), fmt)
+
+
+def _finish(x):
+    """Round half up and saturate to uint8 (matches reference._finish)."""
+    return jnp.clip(jnp.floor(x + 0.5), 0, 255).astype(jnp.uint8)
+
+
+def _taps(q, axis: int, offsets: Tuple[int, ...]):
+    """Stack replicate-padded shifted views on a new axis 0: the k-th
+    slice satisfies ``out[k][..., i] = q[..., i + offsets[k]]`` with
+    edges replicated.  This is the gather side of a filter tap; the
+    weighted accumulation over axis 0 is ONE engine dispatch."""
+    axis = axis % q.ndim
+    left = max(-min(offsets), 0)
+    right = max(max(offsets), 0)
+    pad = [(0, 0)] * q.ndim
+    pad[axis] = (left, right)
+    p = jnp.pad(q, pad, mode="edge")
+    n = q.shape[axis]
+    return jnp.stack([jax.lax.slice_in_dim(p, o + left, o + left + n,
+                                           axis=axis) for o in offsets])
+
+
+# ----------------------------------------------------------- registry --
+
+@dataclasses.dataclass(frozen=True)
+class ImageOp:
+    """One registered operator: the approximate implementation paired
+    with its ideal float reference (``n_inputs`` images each)."""
+
+    name: str
+    fn: Callable
+    reference: Callable
+    n_inputs: int = 1
+
+
+OPERATORS: Dict[str, ImageOp] = {}
+
+
+def register_operator(name: str, reference_fn: Callable, n_inputs: int = 1):
+    """Decorator pairing an approximate operator with its reference."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in OPERATORS:
+            raise ValueError(f"operator {name!r} already registered")
+        OPERATORS[name] = ImageOp(name, fn, reference_fn, n_inputs)
+        return fn
+
+    return deco
+
+
+def get_operator(name: str) -> ImageOp:
+    try:
+        return OPERATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown operator {name!r}; registered: "
+                       f"{sorted(OPERATORS)}") from None
+
+
+def operator_names() -> Tuple[str, ...]:
+    return tuple(sorted(OPERATORS))
+
+
+# ---------------------------------------------------------- operators --
+
+@register_operator("box_blur", reference.box_blur)
+def box_blur(img, ax: AxEngine):
+    """3x3 box blur, separable: two fused 3-term accumulations.
+
+    Headroom: 9 * 255 * 2^3 = 18360 < 2^15, so both passes accumulate
+    unnormalized; the /9 normalization is one exact scale at the end."""
+    e = _with_frac(ax, _F_SEP)
+    q = _q(img, e.fmt)
+    h = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)))
+    v = e.accumulate_signed(_taps(h, -2, (-1, 0, 1)))
+    return _finish(dequantize(v, e.fmt) / 9.0)
+
+
+def _gauss3(e: AxEngine, q):
+    """Separable 3x3 binomial core: two (1, 2, 1)/4 fused weighted
+    accumulations with exact rounding shifts — shared by gaussian_blur
+    and the blur inside sharpen's unsharp mask."""
+    h = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)), (1, 2, 1), shift=2)
+    return e.accumulate_signed(_taps(h, -2, (-1, 0, 1)), (1, 2, 1), shift=2)
+
+
+@register_operator("gaussian_blur", reference.gaussian_blur)
+def gaussian_blur(img, ax: AxEngine):
+    """3x3 binomial (Gaussian) blur: separable (1, 2, 1)/4 passes, each
+    one fused weighted accumulation with an exact rounding shift."""
+    e = _with_frac(ax, _F_SEP)
+    return _finish(dequantize(_gauss3(e, _q(img, e.fmt)), e.fmt))
+
+
+@register_operator("sharpen", reference.sharpen)
+def sharpen(img, ax: AxEngine, amount: int = 1):
+    """Unsharp mask: ``(1 + amount) * img - amount * blur`` as one
+    weighted approximate pair-add on top of the Gaussian pyramid."""
+    if not 0 <= amount <= 15:
+        # (1 + amount) * 255 * 2^_F_SEP must stay below 2^15
+        raise ValueError(f"amount must be in [0, 15] (Q16.{_F_SEP} "
+                         f"headroom); got {amount}")
+    e = _with_frac(ax, _F_SEP)
+    q = _q(img, e.fmt)
+    s = e.scaled_add(q, _gauss3(e, q), 1 + amount, -amount)
+    return _finish(dequantize(s, e.fmt))
+
+
+@register_operator("sobel", reference.sobel)
+def sobel(img, ax: AxEngine):
+    """Sobel edge magnitude |Gx| + |Gy| (the L1 merge is itself an
+    approximate add), gradients as smooth(1,2,1) x diff(+1,-1)."""
+    e = _with_frac(ax, _F_SOBEL)
+    q = _q(img, e.fmt)
+    sx = e.accumulate_signed(_taps(q, -2, (-1, 0, 1)), (1, 2, 1))
+    gx = e.accumulate_signed(_taps(sx, -1, (1, -1)), (1, -1))
+    sy = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)), (1, 2, 1))
+    gy = e.accumulate_signed(_taps(sy, -2, (1, -1)), (1, -1))
+    mag = e.scaled_add(jnp.abs(gx), jnp.abs(gy))
+    return _finish(dequantize(mag, e.fmt) / 4.0)
+
+
+@register_operator("add", reference.img_add, n_inputs=2)
+def img_add(a, b, ax: AxEngine):
+    """Saturating image add (exposure stacking): one approximate add
+    per pixel.  Exact for the accurate kind (510 * 2^6 fits Q16.6)."""
+    e = _with_frac(ax, _F_ADD)
+    s = e.scaled_add(_q(a, e.fmt), _q(b, e.fmt))
+    return _finish(dequantize(s, e.fmt))
+
+
+@register_operator("blend", reference.blend, n_inputs=2)
+def blend(a, b, ax: AxEngine, alpha: float = 0.5):
+    """Alpha blend with a 6-bit quantized alpha: one weighted
+    approximate pair-add, then an exact rounding shift.  At alpha = 0.5
+    the accurate kind is bit-identical to the float reference."""
+    if not 0.0 <= alpha <= 1.0:
+        raise ValueError(f"alpha must be in [0, 1] (the weighted sum "
+                         f"must fit the 16-bit datapath); got {alpha}")
+    e = _with_frac(ax, 0)
+    wa = int(round(alpha * (1 << _ALPHA_BITS)))
+    s = e.scaled_add(_q(a, e.fmt), _q(b, e.fmt),
+                     wa, (1 << _ALPHA_BITS) - wa, shift=_ALPHA_BITS)
+    return _finish(dequantize(s, e.fmt))
+
+
+@register_operator("brightness", reference.brightness)
+def brightness(img, ax: AxEngine, delta: float = 37.0):
+    """Brightness adjust: one approximate add of a constant plane.
+
+    Runs at Q16.2 (not Q16.6): with 6 fractional bits the m=8 LSM error
+    stays below half a gray level and every kind rounds lossless; the
+    coarser split keeps the adder families distinguishable."""
+    if not -255.0 <= delta <= 255.0:
+        raise ValueError(f"delta must be in [-255, 255]; got {delta}")
+    e = _with_frac(ax, _F_BRIGHT)
+    q = _q(img, e.fmt)
+    qd = jnp.full_like(q, int(round(delta * e.fmt.scale)))
+    return _finish(dequantize(e.scaled_add(q, qd), e.fmt))
+
+
+@register_operator("downsample2x", reference.downsample2x)
+def downsample2x(img, ax: AxEngine):
+    """2x box downsampling: the four phase planes of each 2x2 quad are
+    one fused 4-term accumulation with an exact /4 rounding shift."""
+    e = _with_frac(ax, _F_DOWN)
+    q = _q(img, e.fmt)
+    h = q.shape[-2] & ~1
+    w = q.shape[-1] & ~1
+    q = q[..., :h, :w]
+    phases = jnp.stack([q[..., 0::2, 0::2], q[..., 0::2, 1::2],
+                        q[..., 1::2, 0::2], q[..., 1::2, 1::2]])
+    return _finish(dequantize(e.accumulate_signed(phases, shift=2), e.fmt))

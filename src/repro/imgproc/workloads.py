@@ -1,0 +1,140 @@
+"""Workload registry: named image-processing tasks over the ax engines.
+
+A workload maps a batch of uint8 images to processed uint8 images for a
+given adder kind/backend, paired with the ideal reference output the
+corpus scores against.  Two sources register here:
+
+- every operator in :mod:`repro.imgproc.ops` (vmapped over the batch on
+  the jax/pallas backends, looped on the host ``numpy`` backend), and
+- the FFT->IFFT reconstruction that used to be a one-off in
+  ``repro.image.pipeline`` — now just another registered workload
+  (its reference is the source image itself).
+
+Binary operators pair each image with the next one in the batch
+(``roll(imgs, 1)``), so a batch of B images yields B pairs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.specs import paper_spec
+from repro.imgproc import ops as ops_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One registered task.
+
+    Attributes:
+      name: registry key.
+      run: ``(imgs, kind, backend, fast, **kw) -> uint8 batch``.
+      reference: ``(imgs, **kw) -> uint8 batch`` (ideal float path).
+      batched: runs as one jittable batched pass (False for the host
+        FFT reconstruction, which the corpus only includes on request).
+    """
+
+    name: str
+    run: Callable
+    reference: Callable
+    batched: bool = True
+
+
+WORKLOADS: Dict[str, Workload] = {}
+
+
+def register_workload(workload: Workload) -> Workload:
+    if workload.name in WORKLOADS:
+        raise ValueError(f"workload {workload.name!r} already registered")
+    WORKLOADS[workload.name] = workload
+    return workload
+
+
+def get_workload(name: str) -> Workload:
+    try:
+        return WORKLOADS[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; registered: "
+                       f"{sorted(WORKLOADS)}") from None
+
+
+def workload_names(batched_only: bool = False) -> Tuple[str, ...]:
+    return tuple(sorted(n for n, w in WORKLOADS.items()
+                        if w.batched or not batched_only))
+
+
+# ------------------------------------------------- operator workloads --
+
+def _pair(imgs):
+    """Second operand for binary operators: each image with the next."""
+    return np.roll(np.asarray(imgs), 1, axis=0)
+
+
+def _operator_workload(op: ops_lib.ImageOp) -> Workload:
+    @functools.lru_cache(maxsize=None)
+    def _jitted(kind, backend, fast, kw_items):
+        """One jit(vmap(op)) per (kind, backend, fast, kwargs) cell, so
+        warm corpus calls hit the XLA cache instead of re-tracing."""
+        ax = ops_lib.make_image_engine(kind, backend=backend, fast=fast)
+        kw = dict(kw_items)
+        if op.n_inputs == 2:
+            return jax.jit(jax.vmap(lambda a, b: op.fn(a, b, ax, **kw)))
+        return jax.jit(jax.vmap(lambda a: op.fn(a, ax, **kw)))
+
+    def run(imgs, kind="haloc_axa", backend=None, fast=False, **kw):
+        ax = ops_lib.make_image_engine(kind, backend=backend, fast=fast)
+        imgs = np.asarray(imgs)
+        if ax.backend.name == "numpy":
+            # Host reference engine: not traceable under vmap/jit, but
+            # operators accept leading batch dims natively — one call.
+            if op.n_inputs == 2:
+                return np.asarray(op.fn(imgs, _pair(imgs), ax, **kw))
+            return np.asarray(op.fn(imgs, ax, **kw))
+        fn = _jitted(kind, ax.backend.name, fast, tuple(sorted(kw.items())))
+        x = jnp.asarray(imgs)
+        if op.n_inputs == 2:
+            return np.asarray(fn(x, jnp.asarray(_pair(imgs))))
+        return np.asarray(fn(x))
+
+    def reference(imgs, **kw):
+        imgs = np.asarray(imgs)
+        if op.n_inputs == 2:
+            return op.reference(imgs, _pair(imgs), **kw)
+        return op.reference(imgs, **kw)
+
+    return Workload(name=op.name, run=run, reference=reference)
+
+
+for _op in ops_lib.OPERATORS.values():
+    register_workload(_operator_workload(_op))
+
+
+# -------------------------------------------- FFT->IFFT reconstruction --
+
+def _fft_run(imgs, kind="haloc_axa", backend: Optional[str] = None,
+             fast: bool = False, frac_bits: int = 6, block: int = 16):
+    """Paper Fig-5 reconstruction, migrated from ``repro.image.pipeline``:
+    block FFT -> IFFT of each image through the N=32 adder datapath.
+    ``fast`` is part of the uniform workload call signature but has no
+    effect here: the fixed FFT butterflies have no fused-variant toggle."""
+    del fast
+    from repro.image.pipeline import reconstruct
+    spec = paper_spec(kind)
+    return np.stack([reconstruct(np.asarray(im), spec, frac_bits=frac_bits,
+                                 block=block, backend=backend or "numpy")
+                     for im in np.asarray(imgs)])
+
+
+def _fft_reference(imgs, **_kw):
+    """An exact FFT->IFFT round trip is the identity: the source batch."""
+    return np.asarray(imgs).astype(np.uint8)
+
+
+register_workload(Workload(name="fft_reconstruct", run=_fft_run,
+                           reference=_fft_reference, batched=False))

@@ -191,11 +191,17 @@ def _trip_count(cond: Computation,
 def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
     out_shapes = _shape_list(ins.out_text)
     out_elems = sum(n for _, n in out_shapes)
-    lhs_m = re.search(r"dot\(%?([\w.\-]+),", ins.line)
+    # The lhs operand may carry its type inline (newer HLO dumps:
+    # ``dot(f32[128,256]{1,0} %Arg_0.1, ...)``, possibly with a tiled
+    # layout suffix ``{1,0:T(8,128)}``) or be a bare reference
+    # (``dot(%Arg_0.1, ...)``); accept both and prefer the inline type.
+    lhs_m = re.search(
+        r"dot\((?:([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)",
+        ins.line)
     contract = 1
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
-    if lhs_m and cm and lhs_m.group(1) in shapes:
-        dims_text = shapes[lhs_m.group(1)]
+    if lhs_m and cm:
+        dims_text = lhs_m.group(1) or shapes.get(lhs_m.group(2), "")
         sm = _SHAPE_RE.search(dims_text)
         if sm and sm.group(2):
             dims = [int(d) for d in sm.group(2).split(",")]

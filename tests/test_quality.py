@@ -1,0 +1,67 @@
+"""Focused coverage for ``repro.image.quality`` (ISSUE 2 satellite):
+PSNR identical-image (inf) case, SSIM symmetry/range, and the paper's
+``quality_band`` boundary values."""
+
+import numpy as np
+import pytest
+
+from repro.image.quality import psnr, quality_band, ssim
+
+
+def _imgs():
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, 256, (48, 48)).astype(np.uint8)
+    b = np.clip(a.astype(np.int32)
+                + rng.integers(-25, 25, a.shape), 0, 255).astype(np.uint8)
+    return a, b
+
+
+def test_psnr_identical_is_inf():
+    a, _ = _imgs()
+    assert psnr(a, a) == float("inf")
+    assert psnr(a.astype(np.float64), a.astype(np.float64)) == float("inf")
+
+
+def test_psnr_known_mse():
+    a = np.zeros((16, 16), np.uint8)
+    b = np.full((16, 16), 16, np.uint8)  # MSE = 256 -> 10*log10(255^2/256)
+    assert psnr(a, b) == pytest.approx(10 * np.log10(255.0 ** 2 / 256.0))
+    # one-gray-level uniform error with a custom peak
+    assert psnr(a, np.ones_like(a), peak=1.0) == pytest.approx(0.0)
+
+
+def test_psnr_decreases_with_noise():
+    a, b = _imgs()
+    worse = np.clip(b.astype(np.int32) + 30, 0, 255).astype(np.uint8)
+    assert psnr(a, worse) < psnr(a, b) < float("inf")
+
+
+def test_ssim_identical_is_one():
+    a, _ = _imgs()
+    assert ssim(a, a) == pytest.approx(1.0)
+
+
+def test_ssim_symmetry():
+    a, b = _imgs()
+    assert ssim(a, b) == pytest.approx(ssim(b, a), rel=1e-12)
+
+
+def test_ssim_range_and_sensitivity():
+    a, b = _imgs()
+    s = ssim(a, b)
+    assert -1.0 <= s < 1.0
+    # an inverted image is less similar than a lightly-noised one
+    assert ssim(a, 255 - a) < s
+
+
+def test_quality_band_boundaries():
+    """Bands are strict-greater: the boundary value falls DOWN a band."""
+    assert quality_band(1.0) == "high"
+    assert quality_band(0.95) == "high"
+    assert quality_band(0.90) == "acceptable"   # not 'high'
+    assert quality_band(0.75) == "acceptable"
+    assert quality_band(0.70) == "low"          # not 'acceptable'
+    assert quality_band(0.50) == "low"
+    assert quality_band(0.30) == "poor"         # not 'low'
+    assert quality_band(0.0) == "poor"
+    assert quality_band(-1.0) == "poor"
