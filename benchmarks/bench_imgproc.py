@@ -1,32 +1,110 @@
-"""imgproc corpus benchmark: {Table-I adder kinds} x {batched image
-operators} on a synthetic batch, scored against the ideal float
-references (PSNR/SSIM + warm-call throughput).
+"""imgproc corpus + pipeline benchmark.
 
-``--quick`` (via benchmarks/run.py) shrinks the batch; standalone runs
-use a 8 x 128 x 128 batch.  The FFT reconstruction workload is covered
-separately by fig5_image.py, so it is excluded here.
+Two sections:
+
+1. **Corpus**: {Table-I adder kinds} x {batched image workloads,
+   pipelines included} on a synthetic batch, scored against the ideal
+   float references (PSNR/SSIM + warm-call throughput).
+2. **Plan fusion**: every stock pipeline (``repro.imgproc.plan``)
+   timed as ONE compiled dispatch vs the same stages run individually
+   through the workload registry (one jit dispatch + host round-trip
+   per stage) — the fused/sequential MPix/s pair is the plan API's
+   headline number.
+
+All timing through ``benchmarks.timing.timeit_jax`` (compile excluded,
+device-synced, best-of-rounds).  ``--quick`` (via benchmarks/run.py)
+shrinks the batch; standalone runs use 8 x 128x128.  Returns
+(csv_lines, json_records); records go to ``BENCH_imgproc.json``.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Tuple
 
-from repro.imgproc import format_table, run_corpus, synthetic_batch
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import timeit_jax
+from repro.imgproc import (PIPELINES, compile_pipeline, format_table,
+                           get_workload, run_corpus, synthetic_batch)
+
+
+def _pipeline_records(batches, kind: str, backend: str,
+                      strategy) -> Tuple[List[str], List[Dict]]:
+    """Fused (one compiled dispatch) vs sequential (one workload call,
+    with its jit dispatch and host round-trip, per stage), per stock
+    pipeline and batch size.  The small batch is the dispatch-bound
+    regime the plan API targets; the large one the compute-bound end."""
+    lines: List[str] = []
+    records: List[Dict] = []
+    for batch in batches:
+        mpix = batch.size / 1e6
+        shape = "x".join(map(str, batch.shape))
+        x = jnp.asarray(batch)
+        print(f"\n== plan fusion (batch {shape}, kind={kind}, "
+              f"backend={backend}) ==")
+        for name, stages in PIPELINES.items():
+            pipe = compile_pipeline(stages, kind=kind, backend=backend,
+                                    strategy=strategy)
+
+            def sequential(b):
+                y = b
+                for st in stages:
+                    op, kw = (st, {}) if isinstance(st, str) else st
+                    y = get_workload(op).run(y, kind=kind, backend=backend,
+                                             strategy=strategy, **kw)
+                return y
+
+            # Bit-identity first: the plan must equal its unfused stages.
+            np.testing.assert_array_equal(np.asarray(pipe(x)),
+                                          sequential(batch))
+            t_fused = timeit_jax(pipe, x, reps=10, rounds=5)
+            t_seq = timeit_jax(sequential, batch, reps=10, rounds=5)
+            speed = t_seq / t_fused
+            print(f"  {name:24s} fused {mpix / t_fused:8.1f} MPix/s   "
+                  f"sequential {mpix / t_seq:8.1f} MPix/s   "
+                  f"({speed:.2f}x, bit-identical)")
+            lines.append(f"imgproc/{name}/fused@{shape},"
+                         f"{t_fused * 1e6:.0f},MPix/s="
+                         f"{mpix / t_fused:.2f};vs_sequential="
+                         f"{speed:.2f}x")
+            for label, t in (("plan-fused", t_fused),
+                             ("sequential", t_seq)):
+                records.append({
+                    "op": f"pipeline/{name}", "backend": backend,
+                    "strategy": label, "batch": shape,
+                    "mpix_per_s": mpix / t, "wall_ms": t * 1e3,
+                })
+    return lines, records
 
 
 def run(n_images: int = 8, size: int = 128, backend: str = "jax",
-        fast: bool = False) -> List[str]:
+        fast: bool = False, strategy=None,
+        kind: str = "haloc_axa") -> Tuple[List[str], List[Dict]]:
+    from repro.ax.backends import resolve_strategy
+    strategy = resolve_strategy(strategy, fast)
     batch = synthetic_batch(n_images, size)
-    rows = run_corpus(batch=batch, backend=backend, fast=fast)
+    rows = run_corpus(batch=batch, backend=backend, strategy=strategy)
     print(f"\n== imgproc corpus ({n_images} x {size}x{size}, "
-          f"backend={backend}) — PSNR dB / SSIM ==")
+          f"backend={backend}, strategy={strategy}) — PSNR dB / SSIM ==")
     print(format_table(rows))
     slowest = min(rows, key=lambda r: r.mpix_per_s)
     fastest = max(rows, key=lambda r: r.mpix_per_s)
     print(f"throughput: {fastest.workload}/{fastest.kind} "
           f"{fastest.mpix_per_s:.1f} MPix/s ... {slowest.workload}/"
           f"{slowest.kind} {slowest.mpix_per_s:.1f} MPix/s")
-    return [r.csv() for r in rows]
+    lines = [r.csv() for r in rows]
+    records = [{
+        "op": r.workload, "backend": backend, "strategy": strategy,
+        "mpix_per_s": r.mpix_per_s, "wall_ms": r.seconds * 1e3,
+        "kind": r.kind, "psnr": None if np.isinf(r.psnr) else r.psnr,
+        "ssim": r.ssim,
+    } for r in rows]
+    batches = [synthetic_batch(4, 64)]
+    if (n_images, size) != (4, 64):
+        batches.append(batch)
+    pl, pr = _pipeline_records(batches, kind, backend, strategy)
+    return lines + pl, records + pr
 
 
 if __name__ == "__main__":

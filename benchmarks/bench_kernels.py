@@ -1,59 +1,61 @@
 """Kernel micro-bench: wall time per call (pallas interpret mode on CPU —
 the numbers validate plumbing, not TPU perf) + emulation-efficiency of
-the fused approximate add vs the unfused op-by-op jnp pipeline, both
-expressed through repro.ax engines."""
+the three execution strategies (reference / fused / lut) on the jax
+backend, all expressed through repro.ax engines and timed with the
+shared ``timeit_jax`` discipline.  Returns (csv_lines, json_records);
+records go to ``BENCH_kernels.json``."""
 
 from __future__ import annotations
 
-import time
-from typing import List
+from typing import Dict, List, Tuple
 
-import jax
 import numpy as np
 
+from benchmarks.timing import timeit_jax
 from repro.ax import make_engine
 from repro.core.specs import paper_spec
 
 SPEC = paper_spec("haloc_axa")
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
-
-
-def run() -> List[str]:
+def run() -> Tuple[List[str], List[Dict]]:
     import jax.numpy as jnp
-    out = []
+    out: List[str] = []
+    records: List[Dict] = []
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
     b = jnp.asarray(rng.integers(-2**30, 2**30, (1024, 1024), np.int32))
+    melems = a.size / 1e6
+
+    def record(op, backend, strategy, us):
+        records.append({"op": op, "backend": backend, "strategy": strategy,
+                        "mpix_per_s": melems / (us / 1e6),
+                        "wall_ms": us / 1e3})
 
     pallas = make_engine(SPEC, backend="pallas")
-    us = _time(pallas.add, a, b)
+    us = timeit_jax(pallas.add, a, b) * 1e6
     out.append(f"kernel/approx_add_pallas_1Mi32,{us:.0f},backend=pallas")
+    record("approx_add", "pallas", "reference", us)
 
-    xla = make_engine(SPEC, backend="jax")
-    us2 = _time(xla.add, a, b)
-    out.append(f"kernel/approx_add_unfused_xla_1Mi32,{us2:.0f},backend=jax")
-
-    xla_fast = make_engine(SPEC, backend="jax", fast=True)
-    us2f = _time(xla_fast.add, a, b)
-    out.append(
-        f"kernel/approx_add_fused_xla_1Mi32,{us2f:.0f},backend=jax;fast=1")
+    for strategy in ("reference", "fused", "lut"):
+        eng = make_engine(SPEC, backend="jax", strategy=strategy)
+        us = timeit_jax(eng.add, a, b) * 1e6
+        out.append(f"kernel/approx_add_{strategy}_xla_1Mi32,{us:.0f},"
+                   f"backend=jax;strategy={strategy}")
+        record("approx_add", "jax", strategy, us)
 
     a8 = jnp.asarray(rng.integers(-128, 128, (256, 512), np.int8))
     b8 = jnp.asarray(rng.integers(-128, 128, (512, 256), np.int8))
-    us3 = _time(pallas.matmul, a8, b8)
+    us3 = timeit_jax(pallas.matmul, a8, b8) * 1e6
     out.append(f"kernel/approx_matmul_256x512x256,{us3:.0f},backend=pallas")
+    records.append({"op": "approx_matmul_256x512x256", "backend": "pallas",
+                    "strategy": "reference", "mpix_per_s": None,
+                    "wall_ms": us3 / 1e3})
 
     print("\n== Kernel micro-bench (CPU interpret; TPU is the target) ==")
     for line in out:
         print("  " + line)
-    return out
+    return out, records
 
 
 if __name__ == "__main__":

@@ -1,12 +1,29 @@
 """Benchmark harness — one entry per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables
-on stderr-adjacent stdout sections).
+on stderr-adjacent stdout sections) and writes the machine-readable perf
+trajectory:
+
+- ``BENCH_kernels.json``  — kernel/strategy micro-bench + the Table-I
+  Monte-Carlo sweep timings (op, backend, strategy, MPix/s, wall-ms).
+- ``BENCH_imgproc.json``  — the imgproc corpus and the plan-fused vs
+  sequential pipeline comparison.
+
+``--quick`` shrinks every section (1e6 Monte-Carlo samples, small
+batches) — the CI smoke configuration, which uploads both JSON files as
+artifacts so the perf trajectory is recorded per commit.
 """
 
 from __future__ import annotations
 
+import json
 import sys
+
+
+def _dump(path: str, records) -> None:
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {path} ({len(records)} records)")
 
 
 def main() -> None:
@@ -15,13 +32,19 @@ def main() -> None:
                             fig6_tradeoff, roofline, table1_error, table1_hw)
     lines = []
     lines += table1_hw.run()
-    lines += table1_error.run(n_samples=1_000_000 if quick else 10_000_000)
+    t1_lines, t1_records = table1_error.run(
+        n_samples=1_000_000 if quick else 10_000_000, compare=True)
+    lines += t1_lines
     lines += fig5_image.run(size=256 if quick else 512)
     lines += fig6_tradeoff.run(size=256)
-    lines += bench_imgproc.run(n_images=4 if quick else 8,
-                               size=64 if quick else 128)
-    lines += bench_kernels.run()
+    img_lines, img_records = bench_imgproc.run(n_images=4 if quick else 8,
+                                               size=64 if quick else 128)
+    lines += img_lines
+    kern_lines, kern_records = bench_kernels.run()
+    lines += kern_lines
     lines += roofline.run()
+    _dump("BENCH_kernels.json", kern_records + t1_records)
+    _dump("BENCH_imgproc.json", img_records)
     print("\n== CSV (name,us_per_call,derived) ==")
     for ln in lines:
         print(ln)

@@ -1,39 +1,89 @@
 """Table I (right half): MED / MRED over 10^7 random 32-bit patterns
-(N=32, m=10, k=5), compared against the paper's values."""
+(N=32, m=10, k=5), compared against the paper's values.
+
+The sweep runs every Table-I kind over ONE shared operand stream
+(``simulate_error_metrics_sweep`` — reports bit-identical to the old
+per-kind loops, which re-generated the same seeded stream per kind).
+``strategy="lut"`` (the default) evaluates each kind through its
+compiled low-part table: per-config marginal cost is one gather + one
+division pass, which is what makes broad (kind, m, k) sweeps
+affordable.  ``--compare`` (or ``compare=True``) times the reference
+strategy on the same stream and prints the speedup.
+"""
 
 from __future__ import annotations
 
+import sys
 import time
-from typing import List
+from typing import Dict, List, Tuple
 
 from repro.core.hwcost import PAPER_TABLE1
-from repro.core.metrics import simulate_error_metrics
+from repro.core.metrics import simulate_error_metrics_sweep
 from repro.core.specs import TABLE1_KINDS, paper_spec
 
 N_SAMPLES = 10_000_000
 
 
-def run(n_samples: int = N_SAMPLES) -> List[str]:
-    out = []
-    print(f"\n== Table I (error, {n_samples:.0e} random patterns) ==")
+def _sweep(kinds, n_samples: int, strategy: str):
+    specs = [paper_spec(k) for k in kinds]
+    # Warm-up: compiles the per-spec LUTs (process-wide cache) outside
+    # the timed region — the same discipline timeit_jax applies to jit
+    # compilation (benchmarks/timing.py).
+    simulate_error_metrics_sweep(specs, n_samples=1_000, strategy=strategy)
+    t0 = time.perf_counter()
+    reports = simulate_error_metrics_sweep(specs, n_samples=n_samples,
+                                           strategy=strategy)
+    return reports, time.perf_counter() - t0
+
+
+def run(n_samples: int = N_SAMPLES, strategy: str = "lut",
+        compare: bool = False) -> Tuple[List[str], List[Dict]]:
+    out: List[str] = []
+    records: List[Dict] = []
+    kinds = [k for k in TABLE1_KINDS if k != "accurate"]
+    print(f"\n== Table I (error, {n_samples:.0e} random patterns, "
+          f"strategy={strategy}) ==")
+    reports, dt = _sweep(kinds, n_samples, strategy)
     print(f"{'adder':10s} {'MED(model)':>12s} {'MED(paper)':>11s} "
           f"{'MRED(model)':>12s} {'MRED(paper)':>12s} {'ER':>7s}")
-    for kind in TABLE1_KINDS:
-        if kind == "accurate":
-            continue
-        t0 = time.time()
-        rep = simulate_error_metrics(paper_spec(kind), n_samples=n_samples)
-        dt = time.time() - t0
+    per_kind = dt / len(kinds)
+    for kind, rep in zip(kinds, reports):
         p = PAPER_TABLE1[kind]
         print(f"{kind:10s} {rep.med:12.1f} {p['med']:11.1f} "
               f"{rep.mred:12.3e} {p['mred']:12.2e} {rep.error_rate:7.4f}")
         out.append(
-            f"table1_error/{kind},{dt * 1e6:.0f},"
+            f"table1_error/{kind},{per_kind * 1e6:.0f},"
             f"MED={rep.med:.1f};paper={p['med']};"
             f"MED_err_pct={100 * (rep.med - p['med']) / p['med']:.1f};"
-            f"MRED={rep.mred:.3e}")
-    return out
+            f"MRED={rep.mred:.3e};strategy={strategy}")
+        records.append({
+            "op": f"table1_error/{kind}", "backend": "numpy",
+            "strategy": strategy, "mpix_per_s": None,
+            "msamples_per_s": n_samples / per_kind / 1e6,
+            "wall_ms": per_kind * 1e3,
+        })
+    print(f"sweep wall time: {dt:.2f}s ({len(kinds)} kinds, "
+          f"strategy={strategy})")
+    if compare and strategy != "reference":
+        ref_reports, ref_dt = _sweep(kinds, n_samples, "reference")
+        same = all(
+            (a.med, a.mred, a.error_rate, a.wce)
+            == (b.med, b.mred, b.error_rate, b.wce)
+            for a, b in zip(reports, ref_reports))
+        print(f"reference sweep: {ref_dt:.2f}s -> {strategy} is "
+              f"{ref_dt / dt:.1f}x faster (reports bit-identical: {same})")
+        out.append(f"table1_error/speedup,{ref_dt * 1e6:.0f},"
+                   f"{strategy}_vs_reference={ref_dt / dt:.2f}x;"
+                   f"identical={same}")
+        for kind in kinds:
+            records.append({
+                "op": f"table1_error/{kind}", "backend": "numpy",
+                "strategy": "reference", "mpix_per_s": None,
+                "msamples_per_s": n_samples / (ref_dt / len(kinds)) / 1e6,
+                "wall_ms": ref_dt / len(kinds) * 1e3,
+            })
+    return out, records
 
 
 if __name__ == "__main__":
-    run()
+    lines, _ = run(compare="--compare" in sys.argv)

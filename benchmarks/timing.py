@@ -1,0 +1,34 @@
+"""Shared timing discipline for every benchmark in this directory.
+
+``timeit_jax`` is the one way benchmarks measure a callable: untimed
+warm-up calls first (jit compilation, engine/LUT caches), then
+``rounds`` timed rounds of ``reps`` calls each with
+``jax.block_until_ready`` on every result (works for host numpy outputs
+too — it passes non-device values through), reporting the BEST round.
+Best-of-rounds is the standard defence against CPU contention and
+frequency scaling: noise only ever adds time, so the minimum is the
+closest observation of the true cost.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def timeit_jax(fn: Callable, *args, reps: int = 5, rounds: int = 3,
+               warmup: int = 1, **kw) -> float:
+    """Seconds per call of ``fn(*args, **kw)``: compile excluded
+    (``warmup`` untimed calls), device-synced (``block_until_ready``),
+    best of ``rounds`` rounds of ``reps`` calls."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args, **kw))
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best

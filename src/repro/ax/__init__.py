@@ -1,6 +1,6 @@
 """``repro.ax`` — the one way the codebase touches approximate arithmetic.
 
-Three pillars:
+Four pillars:
 
 1. **Adder registry** (:mod:`repro.ax.registry`): ``@register_adder``
    pairs a reference implementation with an optional fused one; the kind
@@ -9,10 +9,14 @@ Three pillars:
 2. **Backend registry** (:mod:`repro.ax.backends`): named execution
    engines — ``"numpy"``, ``"jax"``, ``"pallas"``, ``"pallas_tpu"`` —
    replacing ad-hoc ``interpret`` flags and duplicated pad/tile plumbing.
-3. **Spec-first handle** (:mod:`repro.ax.engine`):
-   ``ax = make_engine(spec, fmt=..., backend=...)`` with ``.add``,
-   ``.add_signed``, ``.sum``, ``.residual_add``, ``.matmul``,
-   ``.butterfly``.
+3. **Execution strategies** (``strategy="reference" | "fused" | "lut"``):
+   three bit-identical evaluations of the same adder; ``"lut"`` runs the
+   compiled ``2^m x 2^m`` low-part table (:mod:`repro.ax.lut`) — one
+   gather + one exact high add.
+4. **Spec-first handle** (:mod:`repro.ax.engine`):
+   ``ax = make_engine(spec, fmt=..., backend=..., strategy=...)`` with
+   ``.add``, ``.add_signed``, ``.sum``, ``.residual_add``,
+   ``.filter_chain``, ``.matmul``, ``.butterfly``.
 
 Only the registry is imported eagerly (it must be importable while
 ``repro.core.adders`` registers the builtin family); the engine and
@@ -37,17 +41,25 @@ _LAZY = {
     "AxEngine": "repro.ax.engine",
     "make_engine": "repro.ax.engine",
     "Backend": "repro.ax.backends",
+    "FilterStage": "repro.ax.backends",
+    "STRATEGIES": "repro.ax.backends",
     "available_backends": "repro.ax.backends",
     "default_backend_name": "repro.ax.backends",
     "get_backend": "repro.ax.backends",
     "register_backend": "repro.ax.backends",
+    "MAX_LUT_LSM_BITS": "repro.ax.lut",
+    "compile_lut": "repro.ax.lut",
+    "error_delta_table": "repro.ax.lut",
+    "lut_supported": "repro.ax.lut",
 }
 
 __all__ = [
-    "AdderImpl", "AxEngine", "Backend", "available_backends",
-    "const_kinds", "default_backend_name", "get_adder", "get_backend",
-    "make_engine", "register_adder", "register_backend",
-    "registered_kinds", "table1_kinds", "unregister_adder",
+    "AdderImpl", "AxEngine", "Backend", "FilterStage", "MAX_LUT_LSM_BITS",
+    "STRATEGIES", "available_backends", "compile_lut", "const_kinds",
+    "default_backend_name", "error_delta_table", "get_adder",
+    "get_backend", "lut_supported", "make_engine", "register_adder",
+    "register_backend", "registered_kinds", "table1_kinds",
+    "unregister_adder",
 ]
 
 

@@ -1,6 +1,6 @@
 """Execution backends for the approximate-arithmetic engine.
 
-A backend is a named execution strategy for the registered adders:
+A backend is a named execution target for the registered adders:
 
 - ``"numpy"``      host-side uint64 behavioral simulation (the Table-I
                    error/Monte-Carlo path and the image FFT pipeline).
@@ -10,28 +10,87 @@ A backend is a named execution strategy for the registered adders:
                    the fused TPU kernels).
 - ``"pallas_tpu"`` Pallas kernels compiled through Mosaic (TPU).
 
+Orthogonal to the backend, every add-shaped primitive takes an execution
+*strategy* — how the adder's bit-level function is evaluated:
+
+- ``"reference"``  the registered bit-level oracle (portable operators).
+- ``"fused"``      the registered algebraically-fused variant where one
+                   exists (bit-identical, fewer vector ops; kinds
+                   without one fall back to the reference form).
+- ``"lut"``        the compiled ``2^m x 2^m`` low-part table
+                   (:mod:`repro.ax.lut`): one gather + one exact high
+                   add.  numpy and jax backends; the Pallas backends
+                   support it for the elementwise ``add`` only
+                   (``repro.kernels.lut_add``).
+
+All strategies and backends are bit-identical for the ops they share —
+enforced by the cross-strategy/cross-backend sweeps in
+``tests/test_ax.py`` and ``tests/test_lut.py``.
+
 Backends replace the ad-hoc ``interpret: bool`` flags and the pad/reshape
 plumbing previously duplicated in ``repro.kernels.ops``: call sites name
 a backend (or let :func:`default_backend_name` auto-detect) and the
 padding/tiling details live here, once.
-
-All backends are bit-identical for the ops they share — enforced by the
-cross-backend sweep in ``tests/test_ax.py``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Union
+from typing import Dict, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ax import lut as lut_lib
+from repro.ax.registry import get_adder
 from repro.core.adders import approx_add, approx_add_mod
 from repro.core.specs import AdderSpec
 
 TWIDDLE_FRAC = 14
+
+#: Legal execution strategies for the add-shaped primitives.
+STRATEGIES = ("reference", "fused", "lut")
+
+
+def check_strategy(strategy: str) -> str:
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    return strategy
+
+
+def resolve_strategy(strategy, fast: bool) -> str:
+    """THE mapping from the back-compat ``fast`` flag to a strategy
+    name: an explicit ``strategy`` wins, else ``fast`` picks fused.
+    Every entry point that still accepts ``fast=`` resolves through
+    here, so the alias lives in exactly one place."""
+    if strategy is None:
+        strategy = "fused" if fast else "reference"
+    return check_strategy(strategy)
+
+
+def _fast(strategy: str) -> bool:
+    """The ``fast`` flag the behavioral models take (lut handled above)."""
+    return strategy == "fused"
+
+
+def _use_lut(spec: AdderSpec, strategy: str) -> bool:
+    """Whether this (spec, strategy) dispatches through the table (exact
+    kinds have no approximate section — the plain add is the fast path)."""
+    return strategy == "lut" and not get_adder(spec.kind).is_exact
+
+
+class FilterStage(NamedTuple):
+    """One separable-filter pass of a :meth:`Backend.filter_chain`:
+    replicate-padded taps at ``offsets`` along ``axis``, exact integer
+    ``weights``, one weighted approximate accumulation, then an exact
+    rounding right-``shift`` (the pass's normalization)."""
+
+    axis: int
+    offsets: Tuple[int, ...]
+    weights: Tuple[int, ...]
+    shift: int = 0
 
 
 class Backend:
@@ -48,18 +107,18 @@ class Backend:
     def available(self) -> bool:
         return True
 
-    def add(self, a, b, spec: AdderSpec, *, fast: bool = False):
+    def add(self, a, b, spec: AdderSpec, *, strategy: str = "reference"):
         """Elementwise approximate add reduced mod 2^N (container dtype)."""
         raise NotImplementedError
 
-    def add_full(self, a, b, spec: AdderSpec, *, fast: bool = False):
+    def add_full(self, a, b, spec: AdderSpec, *, strategy: str = "reference"):
         """Full (N+1)-bit unsigned sum — host-side error analysis only."""
         raise NotImplementedError(
             f"backend {self.name!r} has no full-width add; use the "
             f"'numpy' backend for error analysis")
 
     def accumulate(self, terms, spec: AdderSpec, *, weights=None,
-                   fast: bool = False):
+                   strategy: str = "reference"):
         """Weighted K-term fold through the approximate adder, mod 2^N,
         in ONE dispatch.
 
@@ -71,8 +130,33 @@ class Backend:
         K-2 materialized intermediates."""
         raise NotImplementedError
 
+    def filter_chain(self, q, spec: AdderSpec, stages, *,
+                     strategy: str = "reference"):
+        """Chained separable-filter passes on SIGNED int containers.
+
+        ``q`` holds signed two's-complement values (int32/int64) of
+        ``spec.n_bits`` significant bits; each :class:`FilterStage` taps
+        the previous stage's output with replicate padding, folds the
+        taps through one weighted approximate accumulation, sign-extends
+        and applies the stage's exact rounding shift.  The default
+        implementation is one ``accumulate`` dispatch per stage; the
+        Pallas backends override it with a multi-stage kernel that keeps
+        the tile resident in VMEM across all stages."""
+        xp = np if isinstance(q, np.ndarray) else jnp
+        mask = (1 << spec.n_bits) - 1
+        sign = 1 << (spec.n_bits - 1)
+        for st in stages:
+            taps = xp.stack(edge_taps(xp, q, st.axis, st.offsets))
+            s = self.accumulate(taps & mask, spec, weights=st.weights,
+                                strategy=strategy)
+            s = (s ^ sign) - sign
+            if st.shift:
+                s = (s + (1 << (st.shift - 1))) >> st.shift
+            q = s
+        return q
+
     def matmul(self, a, b, spec: AdderSpec, *, block=(128, 128, 128),
-               fast: bool = False):
+               strategy: str = "reference"):
         """int8 (M,K) @ int8 (K,N) -> int32 with exact per-K-tile dots and
         approximate inter-tile accumulation."""
         raise NotImplementedError
@@ -96,15 +180,41 @@ def _norm_weights(weights, k: int):
     return ws
 
 
+def edge_taps(xp, q, axis: int, offsets):
+    """Replicate-padded shifted views of a filter tap, as a list: the
+    j-th view satisfies ``out[j][..., i] = q[..., i + offsets[j]]``
+    along ``axis`` with edges replicated.  THE tap builder — the
+    backend filter chains and the Pallas conv-chain kernel body both
+    consume it, so edge handling lives in exactly one place.  Works for
+    numpy and jax arrays (``xp`` is the array module)."""
+    axis = axis % q.ndim
+    left = max(-min(offsets), 0)
+    right = max(max(offsets), 0)
+    pad = [(0, 0)] * q.ndim
+    pad[axis] = (left, right)
+    p = xp.pad(q, pad, mode="edge")
+    n = q.shape[axis]
+    idx = [slice(None)] * q.ndim
+    views = []
+    for o in offsets:
+        s = list(idx)
+        s[axis] = slice(o + left, o + left + n)
+        views.append(p[tuple(s)])
+    return views
+
+
 class NumpyBackend(Backend):
     """Host behavioral simulation: uint64 containers, vectorized numpy."""
 
     name = "numpy"
 
-    def add(self, a, b, spec, *, fast=False):
-        return approx_add_mod(np.asarray(a), np.asarray(b), spec, fast=fast)
+    def add(self, a, b, spec, *, strategy="reference"):
+        a, b = np.asarray(a), np.asarray(b)
+        if _use_lut(spec, strategy):
+            return lut_lib.lut_add_mod(a, b, spec)
+        return approx_add_mod(a, b, spec, fast=_fast(strategy))
 
-    def accumulate(self, terms, spec, *, weights=None, fast=False):
+    def accumulate(self, terms, spec, *, weights=None, strategy="reference"):
         t = np.asarray(terms)
         ws = _norm_weights(weights, t.shape[0])
         width = 8 * t.dtype.itemsize
@@ -118,17 +228,26 @@ class NumpyBackend(Backend):
                 term = term * t.dtype.type(w % (1 << spec.n_bits))
                 if spec.n_bits < width:
                     term = term & t.dtype.type((1 << spec.n_bits) - 1)
-            acc = term if acc is None else approx_add_mod(acc, term, spec,
-                                                          fast=fast)
+            acc = term if acc is None else self.add(acc, term, spec,
+                                                    strategy=strategy)
         return acc
 
-    def add_full(self, a, b, spec, *, fast=False):
-        return approx_add(np.asarray(a), np.asarray(b), spec, fast=fast)
+    def add_full(self, a, b, spec, *, strategy="reference"):
+        a, b = np.asarray(a), np.asarray(b)
+        if _use_lut(spec, strategy):
+            return lut_lib.lut_add_full(a, b, spec)
+        return approx_add(a, b, spec, fast=_fast(strategy))
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference"):
         from repro.kernels.ref import ref_approx_matmul
+        if _use_lut(spec, strategy):
+            raise NotImplementedError(
+                "the lut strategy is not implemented for the host matmul "
+                "oracle; use the jax backend (all strategies) or "
+                "strategy='fused'")
         return ref_approx_matmul(np.asarray(a), np.asarray(b), spec,
-                                 bk=block[2])
+                                 bk=block[2], fast=_fast(strategy))
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
                   inverse=False):
@@ -151,20 +270,50 @@ def _like(x, ref_dtype):
     return x.astype(ref_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "fast"))
-def _jax_add(a, b, spec: AdderSpec, fast: bool):
-    s = approx_add_mod(_as_u32(a), _as_u32(b), spec, fast=fast)
+def lut_gather_add_u32(a, b, table, spec: AdderSpec):
+    """THE LUT add on uint32 lanes: one table gather + one exact high
+    add, mod 2^N.  ``table`` is the packed uint16 array — a jit
+    constant here, a VMEM ref block inside the Pallas kernel
+    (``repro.kernels.lut_add``); both consume this one formula."""
+    m = spec.lsm_bits
+    low = jnp.uint32((1 << m) - 1)
+    entry = jnp.take(table, (a & low) << m | (b & low)).astype(jnp.uint32)
+    s = (((a >> m) + (b >> m)) << m) + entry
+    if spec.n_bits < 32:
+        s = s & jnp.uint32((1 << spec.n_bits) - 1)
+    return s
+
+
+def lut_add_mod_u32(a, b, spec: AdderSpec):
+    """LUT-strategy add mod 2^N on uint32 lanes (jax).  The table is a
+    compile-time constant of the (spec,)-keyed jit cache, shared with
+    the host path's numpy table."""
+    return lut_gather_add_u32(a, b, jnp.asarray(lut_lib.compile_lut(spec)),
+                              spec)
+
+
+def _add_mod_u32(a, b, spec: AdderSpec, strategy: str):
+    """Strategy dispatch on uint32 container lanes (shared by the jitted
+    jax entry points and the Pallas kernel bodies)."""
+    if _use_lut(spec, strategy):
+        return lut_add_mod_u32(a, b, spec)
+    return approx_add_mod(a, b, spec, fast=_fast(strategy))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "strategy"))
+def _jax_add(a, b, spec: AdderSpec, strategy: str):
+    s = _add_mod_u32(_as_u32(a), _as_u32(b), spec, strategy)
     return _like(s, a.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "weights", "fast"))
-def _jax_accumulate(terms, spec: AdderSpec, weights, fast: bool):
+@functools.partial(jax.jit, static_argnames=("spec", "weights", "strategy"))
+def _jax_accumulate(terms, spec: AdderSpec, weights, strategy: str):
     from repro.kernels.accumulate import scale_mod_u32
     acc = None
     for i, w in enumerate(weights):
         term = scale_mod_u32(_as_u32(terms[i]), w, spec.n_bits)
-        acc = term if acc is None else approx_add_mod(acc, term, spec,
-                                                      fast=fast)
+        acc = term if acc is None else _add_mod_u32(acc, term, spec,
+                                                    strategy)
     return _like(acc, terms.dtype)
 
 
@@ -181,7 +330,7 @@ def _mul_q14(x, w):
 def _jax_butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
                    inverse: bool):
     def add(x, y):
-        return _jax_add(x, y, spec, False)
+        return _jax_add(x, y, spec, "reference")
 
     rr, ri = _mul_q14(b_re, w_re), _mul_q14(b_re, w_im)
     ir, ii = _mul_q14(b_im, w_re), _mul_q14(b_im, w_im)
@@ -195,15 +344,37 @@ def _jax_butterfly(a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
     return top_re, top_im, bot_re, bot_im
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "block", "fast"))
-def _jax_matmul(a, b, spec: AdderSpec, block, fast: bool):
+@functools.partial(jax.jit, static_argnames=("spec", "block", "strategy"))
+def _jax_matmul(a, b, spec: AdderSpec, block, strategy: str):
+    """K-tiled int8 GEMM with approximate inter-tile accumulation.
+
+    The K loop is a ``lax.fori_loop`` over tiles, so the XLA graph (and
+    compile time) stays O(1) in K instead of unrolling one dot per tile.
+    A ragged last tile is zero-padded: the pad contributes zeros WITHIN
+    that tile's exact dot, so the sequence of approximate adds — and
+    therefore the result — is bit-identical to the unrolled short-slice
+    form (no extra approximate add of a zero partial is introduced).
+    """
     bk = block[2]
     k = a.shape[1]
     a32, b32 = a.astype(jnp.int32), b.astype(jnp.int32)
-    acc = None
-    for k0 in range(0, k, bk):
-        part = jax.lax.dot(a32[:, k0:k0 + bk], b32[k0:k0 + bk])
-        acc = part if acc is None else _jax_add(acc, part, spec, fast)
+    n_tiles = -(-k // bk)
+    if n_tiles * bk != k:
+        pad = n_tiles * bk - k
+        a32 = jnp.pad(a32, ((0, 0), (0, pad)))
+        b32 = jnp.pad(b32, ((0, pad), (0, 0)))
+
+    def tile_dot(i):
+        at = jax.lax.dynamic_slice_in_dim(a32, i * bk, bk, axis=1)
+        bt = jax.lax.dynamic_slice_in_dim(b32, i * bk, bk, axis=0)
+        return jax.lax.dot(at, bt)
+
+    def body(i, acc):
+        return _jax_add(acc, tile_dot(i), spec, strategy)
+
+    acc = tile_dot(0)
+    if n_tiles > 1:
+        acc = jax.lax.fori_loop(1, n_tiles, body, acc)
     return acc
 
 
@@ -212,17 +383,19 @@ class JaxBackend(Backend):
 
     name = "jax"
 
-    def add(self, a, b, spec, *, fast=False):
-        return _jax_add(jnp.asarray(a), jnp.asarray(b), spec, fast)
+    def add(self, a, b, spec, *, strategy="reference"):
+        return _jax_add(jnp.asarray(a), jnp.asarray(b), spec, strategy)
 
-    def accumulate(self, terms, spec, *, weights=None, fast=False):
+    def accumulate(self, terms, spec, *, weights=None, strategy="reference"):
         terms = jnp.asarray(terms)
         return _jax_accumulate(terms, spec,
-                               _norm_weights(weights, terms.shape[0]), fast)
+                               _norm_weights(weights, terms.shape[0]),
+                               strategy)
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference"):
         return _jax_matmul(jnp.asarray(a), jnp.asarray(b), spec,
-                           tuple(block), fast)
+                           tuple(block), strategy)
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
                   inverse=False):
@@ -254,47 +427,56 @@ def _as_tiles(x, size: int, n_cols: int = 256):
     return jnp.pad(x, pad).reshape(x.shape[:-1] + (rows, n_cols))
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "interpret", "fast"))
+@functools.partial(jax.jit, static_argnames=("spec", "interpret", "strategy"))
 def _pallas_elementwise_add(a, b, spec: AdderSpec, interpret: bool,
-                            fast: bool):
+                            strategy: str):
     """Tile plumbing for the fused elementwise kernel: flatten to a
     (rows, 256) grid with ONE pad per operand (no intermediate zeros
-    buffer), run the kernel, slice back."""
-    from repro.kernels.approx_add import approx_add_pallas
-    del fast  # the kernel body is the fused form already
+    buffer), run the kernel, slice back.  The strategy reaches the
+    kernel body: reference/fused select the registered impl, lut runs
+    the VMEM-table gather kernel (``repro.kernels.lut_add``)."""
     shape = a.shape
     size = int(np.prod(shape)) if shape else 1
     ap = _as_tiles(a.reshape(-1), size)
     bp = _as_tiles(b.reshape(-1), size)
-    out = approx_add_pallas(ap, bp, spec, interpret=interpret)
+    if _use_lut(spec, strategy):
+        from repro.kernels.lut_add import lut_add_pallas
+        out = lut_add_pallas(ap, bp, spec, interpret=interpret)
+    else:
+        from repro.kernels.approx_add import approx_add_pallas
+        out = approx_add_pallas(ap, bp, spec, interpret=interpret,
+                                fast=_fast(strategy))
     return out.reshape(-1)[:size].reshape(shape)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "weights", "interpret", "fast"))
+                   static_argnames=("spec", "weights", "interpret",
+                                    "strategy"))
 def _pallas_accumulate(terms, spec: AdderSpec, weights, interpret: bool,
-                       fast: bool):
+                       strategy: str):
     """Tile plumbing for the fused K-term kernel: flatten the trailing
     dims to a (rows, 256) grid with ONE pad of the stacked operand, run
     the kernel, slice back."""
     from repro.kernels.accumulate import accumulate_pallas
-    del fast  # the kernel body folds the fused adder form already
     k = terms.shape[0]
     shape = terms.shape[1:]
     size = int(np.prod(shape)) if shape else 1
     tp = _as_tiles(terms.reshape(k, -1), size)
-    out = accumulate_pallas(tp, spec, weights=weights, interpret=interpret)
+    out = accumulate_pallas(tp, spec, weights=weights, interpret=interpret,
+                            fast=_fast(strategy))
     return out.reshape(-1)[:size].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
-def _pallas_matmul(a, b, spec: AdderSpec, block, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "block", "interpret", "fast"))
+def _pallas_matmul(a, b, spec: AdderSpec, block, interpret: bool,
+                   fast: bool):
     from repro.kernels.approx_matmul import approx_matmul_pallas
     bm, bn, bk = block
     ap, m0, _ = _pad2(a, bm, bk)
     bp, _, n0 = _pad2(b, bk, bn)
     out = approx_matmul_pallas(ap, bp, spec, block=block,
-                               interpret=interpret)
+                               interpret=interpret, fast=fast)
     return out[:m0, :n0]
 
 
@@ -305,19 +487,40 @@ class PallasBackend(Backend):
     name = "pallas"
     interpret = True
 
-    def add(self, a, b, spec, *, fast=False):
-        return _pallas_elementwise_add(jnp.asarray(a), jnp.asarray(b), spec,
-                                       self.interpret, fast)
+    def _kernel_strategy(self, spec, strategy, what):
+        """The Pallas accumulation kernels fold the registered impls in
+        VMEM; the lut strategy only exists for the elementwise add."""
+        if _use_lut(spec, strategy):
+            raise NotImplementedError(
+                f"the lut strategy is not implemented for {what} on the "
+                f"{self.name!r} backend; use strategy='fused' (or the "
+                f"numpy/jax backends for lut)")
+        return strategy
 
-    def accumulate(self, terms, spec, *, weights=None, fast=False):
+    def add(self, a, b, spec, *, strategy="reference"):
+        return _pallas_elementwise_add(jnp.asarray(a), jnp.asarray(b), spec,
+                                       self.interpret, strategy)
+
+    def accumulate(self, terms, spec, *, weights=None, strategy="reference"):
         terms = jnp.asarray(terms)
+        self._kernel_strategy(spec, strategy, "accumulate")
         return _pallas_accumulate(terms, spec,
                                   _norm_weights(weights, terms.shape[0]),
-                                  self.interpret, fast)
+                                  self.interpret, strategy)
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128), fast=False):
+    def filter_chain(self, q, spec, stages, *, strategy="reference"):
+        from repro.kernels.conv_chain import filter_chain_pallas
+        self._kernel_strategy(spec, strategy, "filter_chain")
+        return filter_chain_pallas(jnp.asarray(q), spec, tuple(stages),
+                                   interpret=self.interpret,
+                                   fast=_fast(strategy))
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference"):
+        self._kernel_strategy(spec, strategy, "matmul")
         return _pallas_matmul(jnp.asarray(a), jnp.asarray(b), spec,
-                              tuple(block), self.interpret)
+                              tuple(block), self.interpret,
+                              _fast(strategy))
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
                   inverse=False):

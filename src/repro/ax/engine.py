@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ax.backends import Backend, get_backend
+from repro.ax.backends import Backend, check_strategy, get_backend, \
+    resolve_strategy
+from repro.ax.lut import lut_supported
 from repro.ax.registry import get_adder
 from repro.core.specs import AdderSpec
 from repro.numerics.fixed_point import (
@@ -47,23 +49,32 @@ class AxEngine:
         for raw-container use (e.g. the 32-bit image FFT, which manages
         its own Q-format).
       backend: resolved execution backend.
-      fast: prefer the registered fused implementation (bit-identical).
+      strategy: how the adder's bit-level function is evaluated —
+        ``"reference"`` (the registered oracle), ``"fused"`` (the
+        algebraically-fused variant where registered), or ``"lut"`` (the
+        compiled low-part table).  All bit-identical.
     """
 
     spec: AdderSpec
     fmt: Optional[FixedPointFormat]
     backend: Backend
-    fast: bool = False
+    strategy: str = "reference"
+
+    @property
+    def fast(self) -> bool:
+        """Back-compat view of the old boolean knob."""
+        return self.strategy == "fused"
 
     # ------------------------------------------------------ raw containers
 
     def add(self, a, b):
         """Elementwise approximate add mod 2^N on N-bit containers."""
-        return self.backend.add(a, b, self.spec, fast=self.fast)
+        return self.backend.add(a, b, self.spec, strategy=self.strategy)
 
     def add_full(self, a, b):
         """Full (N+1)-bit unsigned sum (host error analysis; numpy)."""
-        return self.backend.add_full(a, b, self.spec, fast=self.fast)
+        return self.backend.add_full(a, b, self.spec,
+                                     strategy=self.strategy)
 
     def accumulate(self, terms, weights=None):
         """Weighted fold of K stacked container terms mod 2^N in one
@@ -71,7 +82,18 @@ class AxEngine:
         K-1 sequential ``add`` calls).  ``weights`` are K static ints,
         multiplied exactly before the K-1 approximate adds."""
         return self.backend.accumulate(terms, self.spec, weights=weights,
-                                       fast=self.fast)
+                                       strategy=self.strategy)
+
+    def filter_chain(self, q, stages):
+        """Chained separable-filter passes on signed containers: each
+        :class:`FilterStage` taps the previous stage's output (replicate
+        padding), folds the taps through one weighted approximate
+        accumulation and applies its exact rounding shift.  One
+        multi-stage VMEM-resident kernel on the Pallas backends; one
+        ``accumulate`` dispatch per stage elsewhere."""
+        self._require_fmt("filter_chain")
+        return self.backend.filter_chain(q, self.spec, tuple(stages),
+                                         strategy=self.strategy)
 
     # --------------------------------------------------------- fixed point
 
@@ -135,7 +157,7 @@ class AxEngine:
     def matmul(self, a, b, block=(128, 128, 128)):
         """int8 GEMM with approximate inter-K-tile accumulation."""
         return self.backend.matmul(a, b, self.spec, block=block,
-                                   fast=self.fast)
+                                   strategy=self.strategy)
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im,
                   inverse: bool = False):
@@ -147,9 +169,14 @@ class AxEngine:
 
     def replace(self, **kw) -> "AxEngine":
         """A new engine with some fields swapped (``backend`` may be a
-        name string)."""
+        name string; ``fast`` maps onto ``strategy``)."""
         if "backend" in kw:
             kw["backend"] = get_backend(kw["backend"])
+        if "fast" in kw:
+            kw["strategy"] = resolve_strategy(kw.get("strategy"),
+                                              kw.pop("fast"))
+        if "strategy" in kw:
+            check_strategy(kw["strategy"])
         return dataclasses.replace(self, **kw)
 
     def _require_fmt(self, what: str) -> FixedPointFormat:
@@ -199,14 +226,15 @@ def _default_spec(kind: str, n_bits: int) -> AdderSpec:
 
 @functools.lru_cache(maxsize=None)
 def _make_engine_cached(spec: AdderSpec, fmt: Optional[FixedPointFormat],
-                        backend: Backend, fast: bool) -> AxEngine:
-    return AxEngine(spec=spec, fmt=fmt, backend=backend, fast=fast)
+                        backend: Backend, strategy: str) -> AxEngine:
+    return AxEngine(spec=spec, fmt=fmt, backend=backend, strategy=strategy)
 
 
 def make_engine(spec: Union[AdderSpec, str],
                 fmt: Optional[FixedPointFormat] = None,
                 backend: Union[str, Backend, None] = None,
-                fast: bool = False) -> AxEngine:
+                fast: bool = False,
+                strategy: Optional[str] = None) -> AxEngine:
     """Build (or fetch the cached) execution engine.
 
     Args:
@@ -218,8 +246,11 @@ def make_engine(spec: Union[AdderSpec, str],
         the engine to the raw-container ops.
       backend: backend name (``"numpy" | "jax" | "pallas" | "pallas_tpu"``),
         a :class:`Backend` instance, or ``None`` to auto-detect.
-      fast: prefer the registered algebraically-fused implementation.
+      fast: back-compat alias for ``strategy="fused"``.
+      strategy: ``"reference" | "fused" | "lut"`` execution strategy
+        (all bit-identical).  ``None`` derives it from ``fast``.
     """
+    strategy = resolve_strategy(strategy, fast)
     if isinstance(spec, str):
         spec = _default_spec(spec, fmt.n_bits if fmt is not None else 32)
     if (fmt is not None and not get_adder(spec.kind).is_exact
@@ -227,4 +258,8 @@ def make_engine(spec: Union[AdderSpec, str],
         raise ValueError(
             f"adder width N={spec.n_bits} must match fixed-point "
             f"container n_bits={fmt.n_bits}")
-    return _make_engine_cached(spec, fmt, get_backend(backend), fast)
+    if strategy == "lut" and not lut_supported(spec):
+        raise ValueError(
+            f"no compilable LUT for {spec.short_name} (lsm_bits too "
+            f"wide); use strategy='reference' or 'fused'")
+    return _make_engine_cached(spec, fmt, get_backend(backend), strategy)

@@ -1,0 +1,154 @@
+"""Compiled lookup tables for approximate-adder low parts.
+
+Every registered adder's approximate section is a pure function of the
+low ``m`` bits of each operand: the LSM sum bits plus the speculated
+carry into the exact MSM.  For a given :class:`AdderSpec` that is a
+``2^m x 2^m`` truth table, so instead of re-deriving G1/P1/G2/X2 per
+element (the ~20 vector ops of the behavioral models) a hot path can
+
+1. gather one packed entry  ``low_bits | cin << m``  (uint16), and
+2. run one exact high-part add ``((a >> m) + (b >> m)) << m``.
+
+:func:`compile_lut` builds that table once per spec by evaluating the
+registered *reference* implementation on low-bits-only operands (the
+high parts are zero, so the returned "high sum" is exactly the carry),
+and caches it — the same ``AdderSpec`` always returns the same table
+object, so jit caches and the error-analysis fast path share it.
+
+:func:`error_delta_table` derives the signed full-sum error
+``approx(a, b) - (a + b)`` (a pure function of the same low bits),
+which turns Monte-Carlo error analysis into one gather + ``abs``.
+
+Tables are memory-bound in ``m``: ``2^{2m}`` entries (m=10, the paper's
+N=32 partition, is a 2 MiB table; the N=16 image datapath's m=8 is
+128 KiB).  :data:`MAX_LUT_LSM_BITS` caps compilation at m=12 (32 MiB);
+wider LSMs must use the reference or fused strategies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.specs import AdderSpec
+
+#: Widest LSM the LUT strategy compiles (2^{2m} uint16 entries).
+MAX_LUT_LSM_BITS = 12
+
+
+def lut_supported(spec: AdderSpec) -> bool:
+    """Whether ``spec`` has a compilable LUT (exact kinds need none)."""
+    from repro.ax.registry import get_adder
+    if get_adder(spec.kind).is_exact:
+        return True  # strategy degrades to the exact add, no table
+    return spec.lsm_bits <= MAX_LUT_LSM_BITS
+
+
+@functools.lru_cache(maxsize=None)
+def compile_lut(spec: AdderSpec) -> np.ndarray:
+    """The packed low-part table for ``spec``.
+
+    Returns a read-only uint16 array of ``2^{2m}`` entries indexed by
+    ``(a_low << m) | b_low``; each entry packs ``low_bits | cin << m``
+    — which, read as an integer, IS the approximate sum of the two
+    low parts.  Cached per spec: the same ``AdderSpec`` (by equality)
+    always yields the same array object.
+    """
+    from repro.ax.registry import get_adder
+    entry = get_adder(spec.kind)
+    if entry.is_exact:
+        raise ValueError(
+            f"{spec.kind!r} is exact; the lut strategy uses the plain add")
+    m = spec.lsm_bits
+    if m > MAX_LUT_LSM_BITS:
+        raise ValueError(
+            f"lsm_bits={m} exceeds MAX_LUT_LSM_BITS={MAX_LUT_LSM_BITS} "
+            f"(2^{2 * m} entries); use the reference or fused strategy")
+    # uint32 lanes: every intermediate of the reference impls fits in
+    # m+2 <= 14 bits here, and halving the container width halves the
+    # (memory-bound) table build time.
+    vals = np.arange(1 << m, dtype=np.uint32)
+    a = np.repeat(vals, 1 << m)
+    b = np.tile(vals, 1 << m)
+    # With zero high parts the reference impl returns (cin << m) | low:
+    # exactly the packed entry.  cin <= 1 and low < 2^m, so m <= 15
+    # fits uint16 (guaranteed by MAX_LUT_LSM_BITS).
+    packed = entry.impl(a, b, spec).astype(np.uint16)
+    packed.flags.writeable = False
+    return packed
+
+
+@functools.lru_cache(maxsize=None)
+def error_delta_table(spec: AdderSpec) -> np.ndarray:
+    """Signed full-sum error ``approx(a, b) - (a + b)`` per low-bit pair.
+
+    The exact and approximate sums share the high parts (up to the
+    speculated carry, which the packed entry already contains), so the
+    error of the FULL add is this table gathered at
+    ``(a_low << m) | b_low``.  int32, read-only, cached per spec.
+    """
+    packed = compile_lut(spec)
+    m = spec.lsm_bits
+    vals = np.arange(1 << m, dtype=np.int64)
+    exact = (vals[:, None] + vals[None, :]).reshape(-1)
+    delta = (packed.astype(np.int64) - exact).astype(np.int32)
+    delta.flags.writeable = False
+    return delta
+
+
+@functools.lru_cache(maxsize=None)
+def abs_error_table(spec: AdderSpec) -> np.ndarray:
+    """``|approx(a, b) - (a + b)|`` per low-bit pair, uint16, read-only.
+
+    The unsigned view of :func:`error_delta_table` (|delta| < 2^{m+1}
+    fits uint16 for every compilable m): the Monte-Carlo error sweep
+    gathers error distances from this directly."""
+    ed = np.abs(error_delta_table(spec)).astype(np.uint16)
+    ed.flags.writeable = False
+    return ed
+
+
+def lut_index(a, b, spec: AdderSpec):
+    """Gather index ``(a_low << m) | b_low``.
+
+    For contiguous uint64 operands on a little-endian host (the
+    Monte-Carlo simulator's layout) the low bits are sliced straight
+    out of the low 32-bit words — a strided 8 MiB read instead of four
+    full 16 MiB passes; elsewhere the generic mask/shift form runs.
+    """
+    m = spec.lsm_bits
+    low = (1 << m) - 1
+    if (np.little_endian and isinstance(a, np.ndarray)
+            and isinstance(b, np.ndarray)
+            and a.ndim == 1 and a.shape == b.shape
+            and a.dtype == np.uint64 and b.dtype == np.uint64
+            and a.flags.c_contiguous and b.flags.c_contiguous):
+        al = a.view(np.uint32)[0::2] & np.uint32(low)
+        bl = b.view(np.uint32)[0::2] & np.uint32(low)
+        al <<= np.uint32(m)
+        al |= bl
+        return al
+    return ((a & low) << m) | (b & low)
+
+
+def lut_add_full(a, b, spec: AdderSpec) -> np.ndarray:
+    """Full (N+1)-bit approximate sum via the table (numpy hosts).
+
+    Two gathers' worth of memory traffic + one exact high add: the
+    packed entry is the approximate low sum (carry included), the high
+    parts add exactly above bit m.
+    """
+    table = compile_lut(spec)
+    m = spec.lsm_bits
+    entry = table[lut_index(a, b, spec)].astype(a.dtype)
+    return (((a >> m) + (b >> m)) << m) + entry
+
+
+def lut_add_mod(a, b, spec: AdderSpec) -> np.ndarray:
+    """LUT add reduced mod 2^N (same contract as ``approx_add_mod``)."""
+    s = lut_add_full(a, b, spec)
+    width = 8 * s.dtype.itemsize
+    if spec.n_bits < width:
+        return s & s.dtype.type((1 << spec.n_bits) - 1)
+    return s

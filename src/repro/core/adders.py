@@ -78,7 +78,6 @@ def accurate_add(a, b, spec: AdderSpec):
     return a + b
 
 
-@register_adder(specs_lib.LOA, table1=True, order=1)
 def loa_add(a, b, spec: AdderSpec):
     m = spec.lsm_bits
     low_mask = _ones(m)
@@ -88,7 +87,18 @@ def loa_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
-@register_adder(specs_lib.LOAWA, table1=True, order=2)
+def loa_add_fast(a, b, spec: AdderSpec):
+    """Fused LOA (bit-identical): clearing the low m-1 bits of each
+    operand and adding once yields the MSM sum WITH the speculated
+    carry-in G1 above bit m and P1 at bit m-1 (see haloc_axa_add_fast),
+    so G1 is never extracted to bit 0; the stray P1 bit is cleared and
+    the OR low part merged in place."""
+    m = spec.lsm_bits
+    lo = _ones(m - 1)
+    t = (a - (a & lo)) + (b - (b & lo))
+    return (t - (t & (1 << (m - 1)))) | ((a | b) & _ones(m))
+
+
 def loawa_add(a, b, spec: AdderSpec):
     m = spec.lsm_bits
     low_mask = _ones(m)
@@ -97,7 +107,15 @@ def loawa_add(a, b, spec: AdderSpec):
     return (high << m) | low
 
 
-@register_adder(specs_lib.OLOCA, table1=True, order=3, const_section=True)
+def loawa_add_fast(a, b, spec: AdderSpec):
+    """Fused LOAWA (bit-identical): with no carry-in, clearing ALL low m
+    bits makes the single add produce exactly the shifted MSM sum, so
+    the whole adder is one add and one OR-merge."""
+    m = spec.lsm_bits
+    lo = _ones(m)
+    return ((a - (a & lo)) + (b - (b & lo))) | ((a | b) & lo)
+
+
 def oloca_add(a, b, spec: AdderSpec):
     m, k = spec.lsm_bits, spec.const_bits
     const_mask = _ones(k)
@@ -110,6 +128,28 @@ def oloca_add(a, b, spec: AdderSpec):
         low = ((a | b) & or_mask) | const_mask
     high = (a >> m) + (b >> m) + cin
     return (high << m) | low
+
+
+def oloca_add_fast(a, b, spec: AdderSpec):
+    """Fused OLOCA (bit-identical): the LOA fusion with the constant-one
+    section ORed in.  The degenerate m == k partition has no OR section
+    and no carry-in, so it reduces to the LOAWA fusion."""
+    m, k = spec.lsm_bits, spec.const_bits
+    if m == k:
+        lo = _ones(m)
+        return ((a - (a & lo)) + (b - (b & lo))) | _ones(k)
+    lo = _ones(m - 1)
+    t = (a - (a & lo)) + (b - (b & lo))
+    or_mask = _ones(m) ^ _ones(k)
+    return (t - (t & (1 << (m - 1)))) | ((a | b) & or_mask) | _ones(k)
+
+
+register_adder(specs_lib.LOA, fast_impl=loa_add_fast, table1=True,
+               order=1)(loa_add)
+register_adder(specs_lib.LOAWA, fast_impl=loawa_add_fast, table1=True,
+               order=2)(loawa_add)
+register_adder(specs_lib.OLOCA, fast_impl=oloca_add_fast, table1=True,
+               order=3, const_section=True)(oloca_add)
 
 
 @register_adder(specs_lib.ETA, order=7)

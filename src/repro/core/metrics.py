@@ -61,11 +61,24 @@ def _random_operands(rng: np.random.Generator, n: int, n_bits: int):
     return a, b
 
 
-def error_distances(a: np.ndarray, b: np.ndarray, spec: AdderSpec) -> np.ndarray:
-    """|approx(a,b) - (a+b)| as int64 (exact for N <= 62)."""
-    from repro.ax import make_engine  # lazy: core loads before repro.ax
+def error_distances(a: np.ndarray, b: np.ndarray, spec: AdderSpec,
+                    strategy: str = "reference") -> np.ndarray:
+    """|approx(a,b) - (a+b)| as int64 (exact for N <= 62).
+
+    With ``strategy="lut"`` the error is gathered straight from the
+    compiled delta table (the full-sum error is a pure function of the
+    low LSM bits — see :func:`repro.ax.lut.error_delta_table`): one
+    gather + ``abs`` instead of re-deriving the whole approximate sum.
+    """
+    from repro.ax import get_adder  # lazy: core loads before repro.ax
+    if strategy == "lut" and not get_adder(spec.kind).is_exact:
+        from repro.ax.lut import error_delta_table, lut_index
+        delta = error_delta_table(spec)
+        return np.abs(delta[lut_index(a, b, spec)].astype(np.int64))
+    from repro.ax import make_engine
     exact = a + b
-    approx = make_engine(spec, backend="numpy").add_full(a, b)
+    approx = make_engine(spec, backend="numpy",
+                         strategy=strategy).add_full(a, b)
     return np.abs(approx.astype(np.int64) - exact.astype(np.int64))
 
 
@@ -75,8 +88,15 @@ def simulate_error_metrics(
     seed: int = 2025,
     chunk: int = 2_000_000,
     rng: Optional[np.random.Generator] = None,
+    strategy: str = "reference",
 ) -> ErrorReport:
-    """Monte-Carlo MED/MRED/NMED/ER/WCE over uniform random operand pairs."""
+    """Monte-Carlo MED/MRED/NMED/ER/WCE over uniform random operand pairs.
+
+    ``strategy`` picks the adder evaluation path (all bit-identical, so
+    the report is the same to the last ULP): ``"lut"`` replaces the
+    per-sample bit-level emulation with one delta-table gather and is
+    the fast path for wide sweeps (see ``benchmarks/table1_error.py``).
+    """
     rng = rng or np.random.default_rng(seed)
     total_ed = 0.0
     total_red = 0.0
@@ -86,7 +106,7 @@ def simulate_error_metrics(
     while done < n_samples:
         n = min(chunk, n_samples - done)
         a, b = _random_operands(rng, n, spec.n_bits)
-        ed = error_distances(a, b, spec)
+        ed = error_distances(a, b, spec, strategy=strategy)
         exact = (a + b).astype(np.float64)
         total_ed += float(ed.sum(dtype=np.float64))
         # P(exact == 0) is ~2^-2N; guard anyway (MRED undefined at 0).
@@ -107,7 +127,88 @@ def simulate_error_metrics(
     )
 
 
-def exhaustive_error_metrics(spec: AdderSpec) -> ErrorReport:
+def simulate_error_metrics_sweep(
+    specs: Iterable[AdderSpec],
+    n_samples: int = 10_000_000,
+    seed: int = 2025,
+    chunk: int = 2_000_000,
+    strategy: str = "reference",
+) -> "list[ErrorReport]":
+    """Monte-Carlo error metrics for MANY specs over ONE operand stream.
+
+    Every spec is evaluated on the same uniform random pairs, so the
+    reports are bit-identical to per-spec :func:`simulate_error_metrics`
+    calls with the same ``seed`` — but the random generation, the exact
+    sum and (under ``strategy="lut"``, where all specs sharing an LSM
+    width share the gather index) the table index are paid once per
+    chunk instead of once per spec.  This is what makes broad
+    (kind, m, k) sweeps affordable: per-config marginal cost drops to
+    one gather + one division pass (see ``benchmarks/table1_error.py``).
+
+    All specs must share ``n_bits`` (the operand stream's width).
+    """
+    from repro.ax import get_adder  # lazy: core loads before repro.ax
+    specs = list(specs)
+    if not specs:
+        return []
+    n_bits = specs[0].n_bits
+    if any(s.n_bits != n_bits for s in specs):
+        raise ValueError("sweep specs must share n_bits (one stream)")
+    use_lut = {
+        s: strategy == "lut" and not get_adder(s.kind).is_exact
+        for s in specs
+    }
+    ed_tables = {}
+    if any(use_lut.values()):
+        from repro.ax.lut import abs_error_table
+        ed_tables = {s: abs_error_table(s) for s in specs if use_lut[s]}
+    rng = np.random.default_rng(seed)
+    acc = {s: [0.0, 0.0, 0, 0] for s in specs}  # ed, red, err, wce
+    done = 0
+    while done < n_samples:
+        n = min(chunk, n_samples - done)
+        a, b = _random_operands(rng, n, n_bits)
+        exact = (a + b).astype(np.float64)  # exact for N <= 52
+        # P(exact == 0) is ~2^-2N; all-positive chunks (i.e. all of
+        # them, in practice) take the unmasked division path, which
+        # sums the exact same float64 sequence as the masked one.
+        all_pos = float(exact.min(initial=1.0)) > 0.0
+        idx_by_m: Dict[int, np.ndarray] = {}
+        for s in specs:
+            if use_lut[s]:
+                m = s.lsm_bits
+                if m not in idx_by_m:
+                    from repro.ax.lut import lut_index
+                    idx_by_m[m] = lut_index(a, b, s)
+                ed = np.take(ed_tables[s], idx_by_m[m])
+            else:
+                ed = error_distances(a, b, s, strategy=strategy)
+            st = acc[s]
+            st[0] += float(ed.sum(dtype=np.float64))
+            if all_pos:
+                st[1] += float((ed / exact).sum(dtype=np.float64))
+            else:
+                nz = exact > 0
+                st[1] += float((ed[nz] / exact[nz]).sum(dtype=np.float64))
+            st[2] += int(np.count_nonzero(ed))
+            st[3] = max(st[3], int(ed.max(initial=0)))
+        done += n
+    max_out = float((1 << (n_bits + 1)) - 2)
+    return [
+        ErrorReport(
+            spec=s, n_samples=n_samples,
+            med=acc[s][0] / n_samples,
+            mred=acc[s][1] / n_samples,
+            nmed=(acc[s][0] / n_samples) / max_out,
+            error_rate=acc[s][2] / n_samples,
+            wce=acc[s][3],
+        )
+        for s in specs
+    ]
+
+
+def exhaustive_error_metrics(spec: AdderSpec,
+                             strategy: str = "reference") -> ErrorReport:
     """Exact metrics by full enumeration — feasible for N <= ~12."""
     n_bits = spec.n_bits
     if n_bits > 12:
@@ -115,7 +216,7 @@ def exhaustive_error_metrics(spec: AdderSpec) -> ErrorReport:
     vals = np.arange(1 << n_bits, dtype=np.uint64)
     a = np.repeat(vals, 1 << n_bits)
     b = np.tile(vals, 1 << n_bits)
-    ed = error_distances(a, b, spec)
+    ed = error_distances(a, b, spec, strategy=strategy)
     exact = (a + b).astype(np.float64)
     nz = exact > 0
     n = a.size

@@ -4,11 +4,14 @@ subsystem.
 The paper's headline demonstration is deployment of the adder for image
 processing; this package is that demonstration at workload breadth: a
 library of jit/vmap-batched image operators whose every addition routes
-through a :mod:`repro.ax` engine (fused multi-operand accumulation — one
-Pallas tile kernel per filter pass, not K elementwise dispatches), a
-workload registry that also hosts the FFT->IFFT reconstruction formerly
-one-off in ``repro.image.pipeline``, and a corpus runner that sweeps
-{adder kinds} x {operators} x {image batch} into PSNR/SSIM/throughput
+through a :mod:`repro.ax` engine (fused multi-operand accumulation and
+multi-stage ``filter_chain`` passes — one VMEM-resident Pallas kernel
+per separable chain, not K elementwise dispatches), a plan compiler
+(:mod:`repro.imgproc.plan`) that chains operators into ONE jitted
+pipeline dispatch, a workload registry that hosts the operators, the
+stock pipelines and the FFT->IFFT reconstruction formerly one-off in
+``repro.image.pipeline``, and a corpus runner that sweeps
+{adder kinds} x {workloads} x {image batch} into PSNR/SSIM/throughput
 tables (``benchmarks/bench_imgproc.py``).
 
     from repro.imgproc import make_image_engine, box_blur, run_corpus
@@ -43,6 +46,12 @@ from repro.imgproc.ops import (  # noqa: F401
     sharpen,
     sobel,
 )
+from repro.imgproc.plan import (  # noqa: F401
+    PIPELINES,
+    CompiledPipeline,
+    compile_pipeline,
+    run_pipeline,
+)
 from repro.imgproc.workloads import (  # noqa: F401
     WORKLOADS,
     Workload,
@@ -52,10 +61,11 @@ from repro.imgproc.workloads import (  # noqa: F401
 )
 
 __all__ = [
-    "CorpusResult", "IMAGE_N_BITS", "ImageOp", "OPERATORS", "WORKLOADS",
-    "Workload", "blend", "box_blur", "brightness", "downsample2x",
-    "format_table", "gaussian_blur", "get_operator", "get_workload",
-    "img_add", "make_image_engine", "operator_names", "register_operator",
-    "register_workload", "run_corpus", "sharpen", "sobel",
+    "CompiledPipeline", "CorpusResult", "IMAGE_N_BITS", "ImageOp",
+    "OPERATORS", "PIPELINES", "WORKLOADS", "Workload", "blend", "box_blur",
+    "brightness", "compile_pipeline", "downsample2x", "format_table",
+    "gaussian_blur", "get_operator", "get_workload", "img_add",
+    "make_image_engine", "operator_names", "register_operator",
+    "register_workload", "run_corpus", "run_pipeline", "sharpen", "sobel",
     "synthetic_batch", "workload_names",
 ]

@@ -63,20 +63,28 @@ def run_corpus(kinds: Optional[Sequence[str]] = None,
                batch: Optional[np.ndarray] = None,
                n_images: int = 4, size: int = 64, seed: int = 0,
                backend: Optional[str] = "jax", fast: bool = False,
+               strategy: Optional[str] = None,
                include_fft: bool = False,
                workload_kw: Optional[dict] = None) -> List[CorpusResult]:
     """Sweep ``kinds`` x ``workloads`` over one image batch.
 
-    Defaults: the paper's Table-I kinds, every batched (operator)
-    workload, a 4-image 64x64 synthetic batch, the jax backend.  The
-    host-side FFT reconstruction workload joins only with
-    ``include_fft=True`` (it is orders of magnitude slower).  Cells on
-    a jitted backend run twice and the second (warm, jit-cached) call
-    is timed; host-numpy cells have no cache to warm and run once.
+    Defaults: the paper's Table-I kinds, every batched (operator and
+    pipeline) workload, a 4-image 64x64 synthetic batch, the jax
+    backend.  The host-side FFT reconstruction workload joins only with
+    ``include_fft=True`` (it is orders of magnitude slower).
 
-    ``workload_kw`` maps a workload name to extra kwargs for that
-    workload only (e.g. ``{"blend": {"alpha": 0.25}}``), so per-workload
-    options never leak into the other cells of the sweep."""
+    Timing discipline: EVERY cell runs an untimed warm-up call first
+    (jit compilation, engine/LUT caches), then the timed call; jitted
+    workloads return host arrays, so the device sync is inside the
+    timed region and the reported MPix/s is never polluted by compile
+    time (same discipline as ``benchmarks/timing.timeit_jax``).
+
+    ``strategy`` picks the adder evaluation path (reference / fused /
+    lut — bit-identical, so PSNR/SSIM are unchanged; only throughput
+    moves).  ``workload_kw`` maps a workload name to extra kwargs for
+    that workload only (e.g. ``{"blend": {"alpha": 0.25}}``), so
+    per-workload options never leak into the other cells of the sweep.
+    """
     from repro.core.specs import TABLE1_KINDS
     kinds = tuple(kinds) if kinds is not None else tuple(TABLE1_KINDS)
     if workloads is None:
@@ -101,15 +109,17 @@ def run_corpus(kinds: Optional[Sequence[str]] = None,
         else:
             resolved = default_backend_name() if wl.batched else "numpy"
         for kind in kinds:
-            if resolved != "numpy":
-                # Compile warm-up; the jit caches are keyed by spec and
-                # shape, so one batch warms batched workloads and a
-                # single image suffices for per-image host loops.
-                warm = batch if wl.batched else batch[:1]
-                wl.run(warm, kind=kind, backend=backend, fast=fast, **kw)
+            # Warm-up in ALL paths: the jitted backends compile their
+            # shape-keyed caches on the full batch; the host engine has
+            # no jit cache, so one image warms its engine/LUT caches
+            # without re-running the whole batch.
+            warm = batch if wl.batched and resolved != "numpy" \
+                else batch[:1]
+            wl.run(warm, kind=kind, backend=backend, fast=fast,
+                   strategy=strategy, **kw)
             t0 = time.perf_counter()
             out = wl.run(batch, kind=kind, backend=backend, fast=fast,
-                         **kw)
+                         strategy=strategy, **kw)
             dt = time.perf_counter() - t0
             p, s = _score(ref, np.asarray(out))
             rows.append(CorpusResult(

@@ -8,8 +8,10 @@ integer multiplies, and **every addition** — the accumulation loop of
 the separable filters, the blend, the gradient-magnitude merge — routes
 through one :class:`~repro.ax.engine.AxEngine` dispatch via the fused
 multi-operand :meth:`~repro.ax.engine.AxEngine.accumulate_signed` /
-:meth:`~repro.ax.engine.AxEngine.scaled_add` primitives (a single
-Pallas tile kernel on the Pallas backends, not K-1 elementwise calls).
+:meth:`~repro.ax.engine.AxEngine.scaled_add` /
+:meth:`~repro.ax.engine.AxEngine.filter_chain` primitives (a single
+Pallas tile kernel per separable CHAIN on the Pallas backends — the
+tile stays VMEM-resident across consecutive passes).
 
 Per-operator fractional widths are chosen so the true weighted sum of
 every accumulation stays inside the 16-bit two's-complement range
@@ -27,11 +29,11 @@ against them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
+from repro.ax.backends import FilterStage
 from repro.ax.engine import AxEngine, make_engine
 from repro.core.specs import AdderSpec
 from repro.imgproc import reference
@@ -50,13 +52,16 @@ _ALPHA_BITS = 6
 
 def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
                       backend=None, fast: bool = False,
-                      n_bits: int = IMAGE_N_BITS) -> AxEngine:
+                      n_bits: int = IMAGE_N_BITS,
+                      strategy: Optional[str] = None) -> AxEngine:
     """Engine for the image datapath.
 
     A bare kind name gets the paper's scaled partition at ``n_bits``
     (m = n/2, k = m/2 — the Fig-4 example at N=16).  The format's
     fractional split is re-derived per operator, so only the width
-    matters here."""
+    matters here.  ``strategy`` picks the adder evaluation path
+    (reference / fused / lut, all bit-identical); ``fast`` is the
+    back-compat alias for ``strategy="fused"``."""
     if isinstance(kind, AdderSpec):
         n_bits = kind.n_bits
     if not (2 <= n_bits <= 30):
@@ -66,14 +71,14 @@ def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
             f"spec belongs to the FFT pipeline; the image operators use "
             f"the paper's Fig-4 N=16 instance by default.)")
     return make_engine(kind, fmt=FixedPointFormat(n_bits, 0),
-                       backend=backend, fast=fast)
+                       backend=backend, fast=fast, strategy=strategy)
 
 
 def _with_frac(ax: AxEngine, frac_bits: int) -> AxEngine:
     """The cached engine with the operator's Q-format split."""
     return make_engine(ax.spec,
                        fmt=FixedPointFormat(ax.spec.n_bits, frac_bits),
-                       backend=ax.backend, fast=ax.fast)
+                       backend=ax.backend, strategy=ax.strategy)
 
 
 def _q(img, fmt: FixedPointFormat):
@@ -83,22 +88,6 @@ def _q(img, fmt: FixedPointFormat):
 def _finish(x):
     """Round half up and saturate to uint8 (matches reference._finish)."""
     return jnp.clip(jnp.floor(x + 0.5), 0, 255).astype(jnp.uint8)
-
-
-def _taps(q, axis: int, offsets: Tuple[int, ...]):
-    """Stack replicate-padded shifted views on a new axis 0: the k-th
-    slice satisfies ``out[k][..., i] = q[..., i + offsets[k]]`` with
-    edges replicated.  This is the gather side of a filter tap; the
-    weighted accumulation over axis 0 is ONE engine dispatch."""
-    axis = axis % q.ndim
-    left = max(-min(offsets), 0)
-    right = max(max(offsets), 0)
-    pad = [(0, 0)] * q.ndim
-    pad[axis] = (left, right)
-    p = jnp.pad(q, pad, mode="edge")
-    n = q.shape[axis]
-    return jnp.stack([jax.lax.slice_in_dim(p, o + left, o + left + n,
-                                           axis=axis) for o in offsets])
 
 
 # ----------------------------------------------------------- registry --
@@ -145,23 +134,24 @@ def operator_names() -> Tuple[str, ...]:
 
 @register_operator("box_blur", reference.box_blur)
 def box_blur(img, ax: AxEngine):
-    """3x3 box blur, separable: two fused 3-term accumulations.
+    """3x3 box blur, separable: ONE two-stage filter chain (a single
+    VMEM-resident multi-pass kernel on the Pallas backends).
 
     Headroom: 9 * 255 * 2^3 = 18360 < 2^15, so both passes accumulate
     unnormalized; the /9 normalization is one exact scale at the end."""
     e = _with_frac(ax, _F_SEP)
     q = _q(img, e.fmt)
-    h = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)))
-    v = e.accumulate_signed(_taps(h, -2, (-1, 0, 1)))
+    v = e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 1, 1)),
+                           FilterStage(-2, (-1, 0, 1), (1, 1, 1))))
     return _finish(dequantize(v, e.fmt) / 9.0)
 
 
 def _gauss3(e: AxEngine, q):
-    """Separable 3x3 binomial core: two (1, 2, 1)/4 fused weighted
-    accumulations with exact rounding shifts — shared by gaussian_blur
+    """Separable 3x3 binomial core: two (1, 2, 1)/4 weighted passes with
+    exact rounding shifts as ONE filter chain — shared by gaussian_blur
     and the blur inside sharpen's unsharp mask."""
-    h = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)), (1, 2, 1), shift=2)
-    return e.accumulate_signed(_taps(h, -2, (-1, 0, 1)), (1, 2, 1), shift=2)
+    return e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 2, 1), 2),
+                              FilterStage(-2, (-1, 0, 1), (1, 2, 1), 2)))
 
 
 @register_operator("gaussian_blur", reference.gaussian_blur)
@@ -189,13 +179,14 @@ def sharpen(img, ax: AxEngine, amount: int = 1):
 @register_operator("sobel", reference.sobel)
 def sobel(img, ax: AxEngine):
     """Sobel edge magnitude |Gx| + |Gy| (the L1 merge is itself an
-    approximate add), gradients as smooth(1,2,1) x diff(+1,-1)."""
+    approximate add), each gradient one smooth(1,2,1) x diff(+1,-1)
+    two-stage filter chain."""
     e = _with_frac(ax, _F_SOBEL)
     q = _q(img, e.fmt)
-    sx = e.accumulate_signed(_taps(q, -2, (-1, 0, 1)), (1, 2, 1))
-    gx = e.accumulate_signed(_taps(sx, -1, (1, -1)), (1, -1))
-    sy = e.accumulate_signed(_taps(q, -1, (-1, 0, 1)), (1, 2, 1))
-    gy = e.accumulate_signed(_taps(sy, -2, (1, -1)), (1, -1))
+    gx = e.filter_chain(q, (FilterStage(-2, (-1, 0, 1), (1, 2, 1)),
+                            FilterStage(-1, (1, -1), (1, -1))))
+    gy = e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 2, 1)),
+                            FilterStage(-2, (1, -1), (1, -1))))
     mag = e.scaled_add(jnp.abs(gx), jnp.abs(gy))
     return _finish(dequantize(mag, e.fmt) / 4.0)
 

@@ -1,0 +1,142 @@
+"""Compiled image-processing pipelines: many operators, ONE dispatch.
+
+Running a multi-stage pipeline operator-by-operator through the corpus
+workloads costs one jit dispatch and one full host<->device round-trip
+of the intermediate image per stage.  :func:`compile_pipeline` chains
+the registered operators into a single jitted callable instead: the
+intermediate images never leave the device, XLA fuses the per-stage
+quantize/dequantize seams, and on the Pallas backends the separable
+stages inside each operator already run as one VMEM-resident
+multi-pass kernel (``repro.kernels.conv_chain``).
+
+Stage semantics are exactly the standalone operators' (including each
+operator's own Q16.f headroom analysis and the uint8 saturation between
+stages), so a compiled pipeline is bit-identical to running its stages
+individually — the speedup is pure dispatch/transfer/fusion.
+
+    from repro.imgproc import compile_pipeline
+
+    pipe = compile_pipeline(("gaussian_blur", "sharpen", "downsample2x"),
+                            kind="haloc_axa", backend="jax")
+    out = pipe(batch)            # one jitted call, uint8 in -> uint8 out
+
+Plans are cached: the same (stages, engine) request returns the same
+compiled object, so warm calls hit the XLA cache.  :data:`PIPELINES`
+names the corpus's stock pipelines (registered as workloads alongside
+the single operators by ``repro.imgproc.workloads``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.imgproc import ops as ops_lib
+
+#: One stage: an operator name, optionally with fixed keyword arguments.
+StageSpec = Union[str, Tuple[str, Dict[str, Any]]]
+
+#: Stock multi-stage pipelines swept by the corpus (registered as
+#: workloads): a denoise->enhance->shrink chain and an edge pipeline.
+PIPELINES: Dict[str, Tuple[StageSpec, ...]] = {
+    "pipe_blur_sharpen_down": ("gaussian_blur", "sharpen", "downsample2x"),
+    "pipe_blur_sobel": ("gaussian_blur", "sobel"),
+}
+
+
+def _norm_stages(stages: Sequence[StageSpec]):
+    """Hashable ((name, ((kw, val), ...)), ...) form; validates ops."""
+    norm = []
+    for st in stages:
+        name, kw = (st, {}) if isinstance(st, str) else st
+        op = ops_lib.get_operator(name)
+        if op.n_inputs != 1:
+            raise ValueError(
+                f"pipelines chain unary operators; {name!r} takes "
+                f"{op.n_inputs} images")
+        norm.append((name, tuple(sorted(kw.items()))))
+    if not norm:
+        raise ValueError("empty pipeline")
+    return tuple(norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPipeline:
+    """A chain of operators compiled to one callable.
+
+    Attributes:
+      stages: normalized (name, kwargs-items) tuples, in order.
+      engine: the shared base image engine (each stage re-derives its
+        own fractional split from it, exactly as standalone ops do).
+      fn: the compiled callable — ``uint8 (B, H, W) -> uint8 batch``
+        (jit(vmap(chain)) on the jax-family backends, a plain host loop
+        on the numpy engine).
+    """
+
+    stages: Tuple[Tuple[str, Tuple], ...]
+    engine: Any
+    fn: Callable = dataclasses.field(compare=False)
+
+    def __call__(self, imgs):
+        return self.fn(imgs)
+
+    @property
+    def stage_names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.stages)
+
+
+@functools.lru_cache(maxsize=None)
+def _compile_cached(stages, kind, backend_name, strategy,
+                    n_bits) -> CompiledPipeline:
+    ax = ops_lib.make_image_engine(kind, backend=backend_name,
+                                   strategy=strategy, n_bits=n_bits)
+
+    def chain(img):
+        x = img
+        for name, kw_items in stages:
+            x = ops_lib.get_operator(name).fn(x, ax, **dict(kw_items))
+        return x
+
+    if ax.backend.name == "numpy":
+        # Host engine: not traceable, but operators take leading batch
+        # dims natively — the chain runs as-is on the whole batch.
+        fn = lambda imgs: np.asarray(chain(np.asarray(imgs)))  # noqa: E731
+    else:
+        fn = jax.jit(jax.vmap(chain))
+    return CompiledPipeline(stages=stages, engine=ax, fn=fn)
+
+
+def compile_pipeline(stages: Sequence[StageSpec],
+                     kind: str = "haloc_axa",
+                     backend: Optional[str] = None,
+                     fast: bool = False,
+                     strategy: Optional[str] = None,
+                     n_bits: int = ops_lib.IMAGE_N_BITS) -> CompiledPipeline:
+    """Compile ``stages`` (operator names, or (name, kwargs) pairs) into
+    one callable over a batch of uint8 images.
+
+    The result is cached by (stages, kind, backend, strategy, n_bits):
+    repeated requests return the same object and warm calls hit the XLA
+    jit cache.  Bit-identical to running the stages individually."""
+    from repro.ax.backends import resolve_strategy
+    strategy = resolve_strategy(strategy, fast)
+    ax = ops_lib.make_image_engine(kind, backend=backend, strategy=strategy,
+                                   n_bits=n_bits)
+    return _compile_cached(_norm_stages(stages), kind, ax.backend.name,
+                           strategy, n_bits)
+
+
+def run_pipeline(stages: Sequence[StageSpec], imgs, *,
+                 kind: str = "haloc_axa", backend: Optional[str] = None,
+                 fast: bool = False, strategy: Optional[str] = None):
+    """One-shot convenience: compile (or fetch) the plan and run it."""
+    pipe = compile_pipeline(stages, kind=kind, backend=backend, fast=fast,
+                            strategy=strategy)
+    if pipe.engine.backend.name == "numpy":
+        return pipe(imgs)
+    return np.asarray(pipe(jnp.asarray(np.asarray(imgs))))

@@ -2,16 +2,21 @@
 
 A workload maps a batch of uint8 images to processed uint8 images for a
 given adder kind/backend, paired with the ideal reference output the
-corpus scores against.  Two sources register here:
+corpus scores against.  Three sources register here:
 
 - every operator in :mod:`repro.imgproc.ops` (vmapped over the batch on
-  the jax/pallas backends, looped on the host ``numpy`` backend), and
+  the jax/pallas backends, looped on the host ``numpy`` backend),
+- every stock pipeline in :data:`repro.imgproc.plan.PIPELINES`, run as
+  ONE plan-compiled dispatch (the whole chain in a single jit, no host
+  round-trips between stages), and
 - the FFT->IFFT reconstruction that used to be a one-off in
   ``repro.image.pipeline`` — now just another registered workload
   (its reference is the source image itself).
 
 Binary operators pair each image with the next one in the batch
-(``roll(imgs, 1)``), so a batch of B images yields B pairs.
+(``roll(imgs, 1)``), so a batch of B images yields B pairs.  Every
+``run`` accepts ``strategy=`` (reference / fused / lut, bit-identical)
+with ``fast=`` kept as the back-compat alias for ``"fused"``.
 """
 
 from __future__ import annotations
@@ -78,17 +83,22 @@ def _pair(imgs):
 
 def _operator_workload(op: ops_lib.ImageOp) -> Workload:
     @functools.lru_cache(maxsize=None)
-    def _jitted(kind, backend, fast, kw_items):
-        """One jit(vmap(op)) per (kind, backend, fast, kwargs) cell, so
-        warm corpus calls hit the XLA cache instead of re-tracing."""
-        ax = ops_lib.make_image_engine(kind, backend=backend, fast=fast)
+    def _jitted(kind, backend, strategy, kw_items):
+        """One jit(vmap(op)) per (kind, backend, strategy, kwargs) cell,
+        so warm corpus calls hit the XLA cache instead of re-tracing."""
+        ax = ops_lib.make_image_engine(kind, backend=backend,
+                                       strategy=strategy)
         kw = dict(kw_items)
         if op.n_inputs == 2:
             return jax.jit(jax.vmap(lambda a, b: op.fn(a, b, ax, **kw)))
         return jax.jit(jax.vmap(lambda a: op.fn(a, ax, **kw)))
 
-    def run(imgs, kind="haloc_axa", backend=None, fast=False, **kw):
-        ax = ops_lib.make_image_engine(kind, backend=backend, fast=fast)
+    def run(imgs, kind="haloc_axa", backend=None, fast=False,
+            strategy=None, **kw):
+        from repro.ax.backends import resolve_strategy
+        strategy = resolve_strategy(strategy, fast)
+        ax = ops_lib.make_image_engine(kind, backend=backend,
+                                       strategy=strategy)
         imgs = np.asarray(imgs)
         if ax.backend.name == "numpy":
             # Host reference engine: not traceable under vmap/jit, but
@@ -96,7 +106,8 @@ def _operator_workload(op: ops_lib.ImageOp) -> Workload:
             if op.n_inputs == 2:
                 return np.asarray(op.fn(imgs, _pair(imgs), ax, **kw))
             return np.asarray(op.fn(imgs, ax, **kw))
-        fn = _jitted(kind, ax.backend.name, fast, tuple(sorted(kw.items())))
+        fn = _jitted(kind, ax.backend.name, strategy,
+                     tuple(sorted(kw.items())))
         x = jnp.asarray(imgs)
         if op.n_inputs == 2:
             return np.asarray(fn(x, jnp.asarray(_pair(imgs))))
@@ -115,15 +126,57 @@ for _op in ops_lib.OPERATORS.values():
     register_workload(_operator_workload(_op))
 
 
+# ------------------------------------------------ pipeline workloads --
+
+def _pipeline_workload(name: str, stages) -> Workload:
+    def _reject_kw(kw):
+        # Pipeline options belong to their stage spec ((op, kwargs)
+        # pairs in plan.PIPELINES); a flat kwarg can't name its stage,
+        # so dropping it silently would skew the scored cell.
+        if kw:
+            raise ValueError(
+                f"pipeline workload {name!r} takes no per-call kwargs "
+                f"(got {sorted(kw)}); bake options into the stage "
+                f"specs of repro.imgproc.plan.PIPELINES")
+
+    def run(imgs, kind="haloc_axa", backend=None, fast=False,
+            strategy=None, **kw):
+        from repro.imgproc.plan import run_pipeline
+        _reject_kw(kw)
+        return run_pipeline(stages, imgs, kind=kind, backend=backend,
+                            fast=fast, strategy=strategy)
+
+    def reference(imgs, **kw):
+        _reject_kw(kw)
+        x = np.asarray(imgs)
+        for st in stages:
+            op_name, okw = (st, {}) if isinstance(st, str) else st
+            x = ops_lib.get_operator(op_name).reference(x, **okw)
+        return x
+
+    return Workload(name=name, run=run, reference=reference)
+
+
+def _register_pipelines():
+    from repro.imgproc.plan import PIPELINES
+    for name, stages in PIPELINES.items():
+        register_workload(_pipeline_workload(name, stages))
+
+
+_register_pipelines()
+
+
 # -------------------------------------------- FFT->IFFT reconstruction --
 
 def _fft_run(imgs, kind="haloc_axa", backend: Optional[str] = None,
-             fast: bool = False, frac_bits: int = 6, block: int = 16):
+             fast: bool = False, strategy: Optional[str] = None,
+             frac_bits: int = 6, block: int = 16):
     """Paper Fig-5 reconstruction, migrated from ``repro.image.pipeline``:
     block FFT -> IFFT of each image through the N=32 adder datapath.
-    ``fast`` is part of the uniform workload call signature but has no
-    effect here: the fixed FFT butterflies have no fused-variant toggle."""
-    del fast
+    ``fast``/``strategy`` are part of the uniform workload call
+    signature but have no effect here: the fixed FFT butterflies run
+    the reference adder form."""
+    del fast, strategy
     from repro.image.pipeline import reconstruct
     spec = paper_spec(kind)
     return np.stack([reconstruct(np.asarray(im), spec, frac_bits=frac_bits,

@@ -38,20 +38,23 @@ def scale_mod_u32(term, w: int, n_bits: int):
     return term
 
 
-def _kernel(t_ref, o_ref, *, spec: AdderSpec, weights):
+def _kernel(t_ref, o_ref, *, spec: AdderSpec, weights, fast: bool):
     acc = None
     for k, w in enumerate(weights):
         term = jax.lax.bitcast_convert_type(t_ref[k], jnp.uint32)
         term = scale_mod_u32(term, w, spec.n_bits)
-        acc = term if acc is None else approx_add_mod(acc, term, spec)
+        acc = term if acc is None else approx_add_mod(acc, term, spec,
+                                                      fast=fast)
     o_ref[...] = jax.lax.bitcast_convert_type(acc, jnp.int32)
 
 
 def accumulate_pallas(terms, spec: AdderSpec, *, weights=None,
-                      block=(256, 256), interpret: bool = True):
+                      block=(256, 256), interpret: bool = True,
+                      fast: bool = False):
     """terms: int32 (K, M, N) two's-complement containers; returns the
     weighted approximate fold, int32 (M, N).  ``weights`` are K static
-    Python ints (default all-ones)."""
+    Python ints (default all-ones); ``fast`` folds through the
+    registered fused adder form (bit-identical)."""
     if terms.ndim != 3:
         raise ValueError(f"stack the terms on axis 0: expected (K, M, N), "
                          f"got shape {terms.shape}")
@@ -66,7 +69,7 @@ def accumulate_pallas(terms, spec: AdderSpec, *, weights=None,
                          f"({bm}, {bn}) block; pad first (backends.py)")
     grid = (m // bm, n // bn)
     return pl.pallas_call(
-        functools.partial(_kernel, spec=spec, weights=ws),
+        functools.partial(_kernel, spec=spec, weights=ws, fast=fast),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         grid=grid,
         in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j))],

@@ -24,7 +24,7 @@ from repro.core.adders import approx_add_mod
 from repro.core.specs import AdderSpec
 
 
-def _kernel(a_ref, b_ref, o_ref, *, spec: AdderSpec):
+def _kernel(a_ref, b_ref, o_ref, *, spec: AdderSpec, fast: bool):
     partial = jnp.dot(a_ref[...], b_ref[...],
                       preferred_element_type=jnp.int32)
 
@@ -36,16 +36,18 @@ def _kernel(a_ref, b_ref, o_ref, *, spec: AdderSpec):
     def _acc():
         acc = jax.lax.bitcast_convert_type(o_ref[...], jnp.uint32)
         par = jax.lax.bitcast_convert_type(partial, jnp.uint32)
-        s = approx_add_mod(acc, par, spec)
+        s = approx_add_mod(acc, par, spec, fast=fast)
         o_ref[...] = jax.lax.bitcast_convert_type(s, jnp.int32)
 
 
 def approx_matmul_pallas(a, b, spec: AdderSpec, *,
-                         block=(128, 128, 128), interpret: bool = True):
+                         block=(128, 128, 128), interpret: bool = True,
+                         fast: bool = False):
     """a: int8 (M, K); b: int8 (K, N) -> int32 (M, N).
 
     K-tile partial products are exact (MXU); their accumulation runs
-    through the approximate adder (two's complement mod 2^32)."""
+    through the approximate adder (two's complement mod 2^32);
+    ``fast`` folds through the registered fused form (bit-identical)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
@@ -53,7 +55,7 @@ def approx_matmul_pallas(a, b, spec: AdderSpec, *,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        functools.partial(_kernel, spec=spec),
+        functools.partial(_kernel, spec=spec, fast=fast),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         grid=grid,
         in_specs=[

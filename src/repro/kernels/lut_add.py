@@ -1,0 +1,62 @@
+"""Pallas kernel: LUT-strategy elementwise approximate add.
+
+The compiled ``2^m x 2^m`` low-part table (:mod:`repro.ax.lut`) turns
+the ~15-op bit-level adder emulation into one gather + one exact high
+add.  This kernel keeps the whole table resident in VMEM next to the
+operand tiles — for the paper's N=32 (m=10) partition that is a 2 MiB
+uint16 block, well inside a TPU core's ~16 MiB, and the image
+datapath's m=8 table is 128 KiB — so every lane's gather hits VMEM,
+never HBM.
+
+The packed entry, read as an integer, IS the approximate sum of the two
+low parts (carry included), so the kernel body is::
+
+    idx   = (a_low << m) | b_low
+    s     = ((a >> m) + (b >> m)) << m  +  table[idx]      (mod 2^N)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.ax import lut as lut_lib
+from repro.core.specs import AdderSpec
+
+
+def _kernel(a_ref, b_ref, t_ref, o_ref, *, spec: AdderSpec):
+    from repro.ax.backends import lut_gather_add_u32
+    a = jax.lax.bitcast_convert_type(a_ref[...], jnp.uint32)
+    b = jax.lax.bitcast_convert_type(b_ref[...], jnp.uint32)
+    s = lut_gather_add_u32(a, b, t_ref[...], spec)
+    o_ref[...] = jax.lax.bitcast_convert_type(s, jnp.int32)
+
+
+def lut_add_pallas(a, b, spec: AdderSpec, *, block=(256, 256),
+                   interpret: bool = True):
+    """a, b: int32 (M, N) two's-complement fixed point; returns the
+    LUT-strategy approximate add mod 2^N, int32 (M, N).  The table rides
+    along as a grid-invariant VMEM operand."""
+    assert a.shape == b.shape and a.ndim == 2
+    table = jnp.asarray(lut_lib.compile_lut(spec))
+    m, n = a.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, "pad to block multiples (see ops.py)"
+    grid = (m // bm, n // bn)
+    entries = int(np.prod(table.shape))
+    return pl.pallas_call(
+        functools.partial(_kernel, spec=spec),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((entries,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(a, b, table)

@@ -11,16 +11,17 @@ from repro.core.specs import AdderSpec
 TWIDDLE_FRAC = 14
 
 
-def ref_approx_add(a: np.ndarray, b: np.ndarray, spec: AdderSpec):
+def ref_approx_add(a: np.ndarray, b: np.ndarray, spec: AdderSpec,
+                   fast: bool = False):
     """int32 two's complement -> int32, via the uint64 behavioral model."""
     au = a.astype(np.int64).astype(np.uint64) & np.uint64(0xFFFFFFFF)
     bu = b.astype(np.int64).astype(np.uint64) & np.uint64(0xFFFFFFFF)
-    s = approx_add(au, bu, spec) & np.uint64(0xFFFFFFFF)
+    s = approx_add(au, bu, spec, fast=fast) & np.uint64(0xFFFFFFFF)
     return s.astype(np.uint32).astype(np.int32)
 
 
 def ref_approx_matmul(a: np.ndarray, b: np.ndarray, spec: AdderSpec,
-                      bk: int = 128):
+                      bk: int = 128, fast: bool = False):
     """int8 GEMM with exact per-K-tile dots and approximate inter-tile
     accumulation, mirroring the kernel's K-tiling exactly."""
     m, k = a.shape
@@ -30,7 +31,8 @@ def ref_approx_matmul(a: np.ndarray, b: np.ndarray, spec: AdderSpec,
     acc = None
     for k0 in range(0, k, bk):
         part = (a32[:, k0:k0 + bk] @ b32[k0:k0 + bk]).astype(np.int32)
-        acc = part if acc is None else ref_approx_add(acc, part, spec)
+        acc = part if acc is None else ref_approx_add(acc, part, spec,
+                                                      fast=fast)
     return acc
 
 
