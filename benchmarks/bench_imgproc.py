@@ -1,6 +1,6 @@
-"""imgproc corpus + pipeline benchmark.
+"""imgproc corpus + pipeline + megapixel-throughput benchmark.
 
-Two sections:
+Three sections:
 
 1. **Corpus**: {Table-I adder kinds} x {batched image workloads,
    pipelines included} on a synthetic batch, scored against the ideal
@@ -10,23 +10,37 @@ Two sections:
    through the workload registry (one jit dispatch + host round-trip
    per stage) — the fused/sequential MPix/s pair is the plan API's
    headline number.
+3. **Megapixel**: the blur→sharpen→downsample chain on a megapixel
+   batch — the PR-3 plan-fused path (stage requant, untiled) vs the
+   integer-domain fast path (``requant="fused"`` + halo-aware tiling +
+   ``strategy="auto"``), the per-Table-1-kind PSNR gate between the
+   two requant modes, and the async double-buffered stream runner at
+   several depths.  The acceptance bar lives here: fast path >= 2x the
+   PR-3 MPix/s with the gate within 0.1 dB for every kind.
 
 All timing through ``benchmarks.timing.timeit_jax`` (compile excluded,
 device-synced, best-of-rounds).  ``--quick`` (via benchmarks/run.py)
-shrinks the batch; standalone runs use 8 x 128x128.  Returns
-(csv_lines, json_records); records go to ``BENCH_imgproc.json``.
+shrinks the batch and runs ONE megapixel cell; standalone runs use
+8 x 128x128 and the full 4 x 1024x1024 sweep.  Returns
+(csv_lines, json_records); records go to ``BENCH_imgproc.json``
+(merged into the committed trajectory, never overwritten).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.timing import timeit_jax
-from repro.imgproc import (PIPELINES, compile_pipeline, format_table,
-                           get_workload, run_corpus, synthetic_batch)
+from repro.imgproc import (PIPELINES, compile_pipeline, compile_tiled,
+                           format_table, fused_psnr_gate, get_workload,
+                           run_corpus, run_streaming, synthetic_batch)
+
+#: The megapixel benchmark's pipeline (the acceptance chain) and tile.
+MEGA_STAGES = PIPELINES["pipe_blur_sharpen_down"]
+MEGA_TILE = (256, 256)
 
 
 def _pipeline_records(batches, kind: str, backend: str,
@@ -78,9 +92,106 @@ def _pipeline_records(batches, kind: str, backend: str,
     return lines, records
 
 
+def _mega_configs():
+    """(label, requant, strategy, tile) — the PR-3 baseline first."""
+    return (("pr3-plan-fused", "stage", "reference", None),
+            ("fused-requant", "fused", "reference", None),
+            ("fused-tiled-auto", "fused", "auto", MEGA_TILE))
+
+
+def _megapixel_records(n_images: int, size: int, backend: str, kind: str,
+                       gate_kinds: Sequence[str],
+                       ) -> Tuple[List[str], List[Dict]]:
+    """Section 3: megapixel throughput + the requant PSNR gate."""
+    batch = synthetic_batch(n_images, size)
+    x = jnp.asarray(batch)
+    mpix = batch.size / 1e6
+    shape = "x".join(map(str, batch.shape))
+    lines: List[str] = []
+    records: List[Dict] = []
+    print(f"\n== megapixel ({shape}, kind={kind}, backend={backend}, "
+          f"chain={'->'.join(MEGA_STAGES)}) ==")
+    times = {}
+    for label, requant, strategy, tile in _mega_configs():
+        pipe = compile_pipeline(MEGA_STAGES, kind=kind, backend=backend,
+                                strategy=strategy, requant=requant)
+        fn = pipe if tile is None else compile_tiled(pipe, batch.shape,
+                                                     tile=tile)
+        t = timeit_jax(fn, x, reps=2, rounds=4)
+        times[label] = t
+        speed = times["pr3-plan-fused"] / t
+        print(f"  {label:20s} {mpix / t:8.1f} MPix/s   "
+              f"({speed:.2f}x vs PR-3)")
+        lines.append(f"imgproc/mega/{label}@{shape},{t * 1e6:.0f},"
+                     f"MPix/s={mpix / t:.2f};vs_pr3={speed:.2f}x")
+        records.append({
+            "op": "mega/pipe_blur_sharpen_down", "backend": backend,
+            "strategy": strategy, "requant": requant, "kind": kind,
+            "batch": shape, "config": label,
+            "tile": None if tile is None else list(tile),
+            "mpix_per_s": mpix / t, "wall_ms": t * 1e3,
+        })
+
+    # The requant PSNR gate, per adder kind: the fused+tiled fast path
+    # must stay within 0.1 dB of the stage-requant result against the
+    # ideal float reference — scored by THE gate implementation
+    # (`repro.imgproc.fused_psnr_gate`, fused side tiled), which also
+    # reports the stronger bit-identity the built-in chains achieve.
+    print(f"  requant gate ({shape}): PSNR stage vs fused+tiled, dB")
+    for k in gate_kinds:
+        gate = fused_psnr_gate(MEGA_STAGES, batch, kind=k,
+                               backend=backend, strategy="auto",
+                               tile=MEGA_TILE)
+        assert gate.admissible(), (k, gate)
+        print(f"    {k:10s} stage={gate.psnr_stage:6.2f}  "
+              f"fused={gate.psnr_fused:6.2f}  "
+              f"delta={gate.delta_db:+.4f}  "
+              f"bit_identical={gate.bit_identical}")
+        records.append({
+            "op": "mega/requant_gate", "backend": backend, "kind": k,
+            "batch": shape, "psnr_stage": gate.psnr_stage,
+            "psnr_fused": gate.psnr_fused,
+            "psnr_delta_db": gate.delta_db,
+            "bit_identical": gate.bit_identical,
+        })
+
+    # The async double-buffered stream runner: a steady stream of
+    # batches through the fast path, naive blocking loop vs pipelined.
+    n_stream = 6
+    stream = [synthetic_batch(max(1, n_images // 2), size, seed=11 + i)
+              for i in range(n_stream)]
+    pipe = compile_pipeline(MEGA_STAGES, kind=kind, backend=backend,
+                            strategy="auto", requant="fused")
+    tiled = compile_tiled(pipe, stream[0].shape, tile=MEGA_TILE)
+    fn = lambda b: tiled(jnp.asarray(b))  # noqa: E731
+    np.asarray(fn(stream[0]))  # warm the jit/tile caches untimed
+    for depth in (1, 2):
+        best = None
+        for _ in range(3):
+            r = run_streaming(fn, stream, depth=depth)
+            best = r if best is None or r.seconds < best.seconds else best
+        label = "blocking" if depth == 1 else f"depth{depth}"
+        stream_shape = "x".join(map(str, stream[0].shape))
+        print(f"  stream {label:9s} {best.mpix_per_s:8.1f} MPix/s "
+              f"({n_stream} batches of {stream[0].shape})")
+        lines.append(f"imgproc/mega/stream-{label}@{stream_shape},"
+                     f"{best.seconds / n_stream * 1e6:.0f},"
+                     f"MPix/s={best.mpix_per_s:.2f}")
+        records.append({
+            "op": "mega/stream", "backend": backend, "strategy": "auto",
+            "requant": "fused", "kind": kind, "depth": depth,
+            "batch": "x".join(map(str, stream[0].shape)),
+            "mpix_per_s": best.mpix_per_s,
+            "wall_ms": best.seconds * 1e3,
+        })
+    return lines, records
+
+
 def run(n_images: int = 8, size: int = 128, backend: str = "jax",
-        fast: bool = False, strategy=None,
-        kind: str = "haloc_axa") -> Tuple[List[str], List[Dict]]:
+        fast: bool = False, strategy=None, kind: str = "haloc_axa",
+        mega_images: int = 4, mega_size: int = 1024,
+        gate_kinds: Optional[Sequence[str]] = None,
+        ) -> Tuple[List[str], List[Dict]]:
     from repro.ax.backends import resolve_strategy
     strategy = resolve_strategy(strategy, fast)
     batch = synthetic_batch(n_images, size)
@@ -94,8 +205,10 @@ def run(n_images: int = 8, size: int = 128, backend: str = "jax",
           f"{fastest.mpix_per_s:.1f} MPix/s ... {slowest.workload}/"
           f"{slowest.kind} {slowest.mpix_per_s:.1f} MPix/s")
     lines = [r.csv() for r in rows]
+    shape = "x".join(map(str, batch.shape))
     records = [{
         "op": r.workload, "backend": backend, "strategy": strategy,
+        "batch": shape,
         "mpix_per_s": r.mpix_per_s, "wall_ms": r.seconds * 1e3,
         "kind": r.kind, "psnr": None if np.isinf(r.psnr) else r.psnr,
         "ssim": r.ssim,
@@ -104,7 +217,12 @@ def run(n_images: int = 8, size: int = 128, backend: str = "jax",
     if (n_images, size) != (4, 64):
         batches.append(batch)
     pl, pr = _pipeline_records(batches, kind, backend, strategy)
-    return lines + pl, records + pr
+    if gate_kinds is None:
+        from repro.core.specs import TABLE1_KINDS
+        gate_kinds = tuple(TABLE1_KINDS)
+    ml, mr = _megapixel_records(mega_images, mega_size, backend, kind,
+                                gate_kinds)
+    return lines + pl + ml, records + pr + mr
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""Trajectory guard: fail if a benchmark run LOST committed records.
+
+``benchmarks/run.py`` merges each run into the committed
+``BENCH_*.json`` trajectory (append new cells, update same-key cells in
+place).  This script asserts the invariant CI relies on: every record
+key present in the committed version of a file (``git show HEAD:...``)
+is still present in the working-tree version.
+
+    python benchmarks/check_trajectory.py BENCH_imgproc.json [more.json]
+
+Exits non-zero, naming the missing cells, if any committed entry
+disappeared.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+from benchmarks.run import record_key
+
+
+def committed(path: str):
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                             capture_output=True, check=True)
+    except subprocess.CalledProcessError:
+        return None  # not committed yet — nothing to guard
+    return json.loads(out.stdout)
+
+
+def check(path: str) -> int:
+    base = committed(path)
+    if base is None:
+        print(f"{path}: no committed version; skipping")
+        return 0
+    with open(path) as f:
+        now = {record_key(r) for r in json.load(f)}
+    missing = [k for r in base if (k := record_key(r)) not in now]
+    if missing:
+        print(f"{path}: LOST {len(missing)} committed trajectory "
+              f"record(s):")
+        for k in missing[:20]:
+            print(f"  {dict(k)}")
+        return 1
+    print(f"{path}: all {len(base)} committed records retained "
+          f"({len(now)} total)")
+    return 0
+
+
+def main(argv) -> int:
+    paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json"]
+    return max((check(p) for p in paths), default=0)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

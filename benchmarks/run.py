@@ -6,24 +6,64 @@ trajectory:
 
 - ``BENCH_kernels.json``  — kernel/strategy micro-bench + the Table-I
   Monte-Carlo sweep timings (op, backend, strategy, MPix/s, wall-ms).
-- ``BENCH_imgproc.json``  — the imgproc corpus and the plan-fused vs
-  sequential pipeline comparison.
+- ``BENCH_imgproc.json``  — the imgproc corpus, the plan-fused vs
+  sequential pipeline comparison, and the megapixel tiled/streamed
+  throughput cells with the requant PSNR gate.
+
+The JSON files are a TRAJECTORY: every run MERGES into the committed
+file instead of overwriting it — records whose identity (all
+non-metric fields) matches an existing entry update it in place, new
+configurations append, and nothing is ever dropped.  CI enforces this
+with ``benchmarks/check_trajectory.py`` (fails the build if a run
+loses committed entries).
 
 ``--quick`` shrinks every section (1e6 Monte-Carlo samples, small
-batches) — the CI smoke configuration, which uploads both JSON files as
+batches, ONE megapixel tiled cell) — the CI smoke configuration, which
+runs under an explicit memory cap and uploads both JSON files as
 artifacts so the perf trajectory is recorded per commit.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
+
+#: Fields that carry measurements; everything else identifies a cell.
+METRIC_FIELDS = frozenset({
+    "mpix_per_s", "wall_ms", "msamples_per_s", "psnr", "ssim",
+    "psnr_stage", "psnr_fused", "psnr_delta_db", "bit_identical",
+    "seconds",
+})
+
+
+def record_key(rec: dict):
+    """The identity of a trajectory record: its non-metric fields."""
+    return tuple(sorted((k, json.dumps(v, sort_keys=True))
+                        for k, v in rec.items()
+                        if k not in METRIC_FIELDS))
+
+
+def merge_records(existing, new):
+    """Append/update semantics: records in ``new`` replace same-key
+    entries of ``existing`` (fresher measurement of the same cell) and
+    otherwise append.  No key of ``existing`` is ever lost."""
+    merged = {record_key(r): r for r in existing}
+    for rec in new:
+        merged[record_key(rec)] = rec
+    return list(merged.values())
 
 
 def _dump(path: str, records) -> None:
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    merged = merge_records(existing, records)
     with open(path, "w") as f:
-        json.dump(records, f, indent=1)
-    print(f"wrote {path} ({len(records)} records)")
+        json.dump(merged, f, indent=1)
+    print(f"wrote {path} ({len(existing)} -> {len(merged)} records, "
+          f"{len(records)} measured this run)")
 
 
 def main() -> None:
@@ -37,8 +77,10 @@ def main() -> None:
     lines += t1_lines
     lines += fig5_image.run(size=256 if quick else 512)
     lines += fig6_tradeoff.run(size=256)
-    img_lines, img_records = bench_imgproc.run(n_images=4 if quick else 8,
-                                               size=64 if quick else 128)
+    img_lines, img_records = bench_imgproc.run(
+        n_images=4 if quick else 8, size=64 if quick else 128,
+        mega_images=1 if quick else 4,
+        gate_kinds=("haloc_axa",) if quick else None)
     lines += img_lines
     kern_lines, kern_records = bench_kernels.run()
     lines += kern_lines

@@ -42,6 +42,7 @@ _LAZY = {
     "make_engine": "repro.ax.engine",
     "Backend": "repro.ax.backends",
     "FilterStage": "repro.ax.backends",
+    "AUTO_STRATEGY": "repro.ax.backends",
     "STRATEGIES": "repro.ax.backends",
     "available_backends": "repro.ax.backends",
     "default_backend_name": "repro.ax.backends",
@@ -54,7 +55,8 @@ _LAZY = {
 }
 
 __all__ = [
-    "AdderImpl", "AxEngine", "Backend", "FilterStage", "MAX_LUT_LSM_BITS",
+    "AUTO_STRATEGY", "AdderImpl", "AxEngine", "Backend", "FilterStage",
+    "MAX_LUT_LSM_BITS",
     "STRATEGIES", "available_backends", "compile_lut", "const_kinds",
     "default_backend_name", "error_delta_table", "get_adder",
     "get_backend", "lut_supported", "make_engine", "register_adder",

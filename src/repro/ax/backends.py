@@ -52,11 +52,18 @@ TWIDDLE_FRAC = 14
 #: Legal execution strategies for the add-shaped primitives.
 STRATEGIES = ("reference", "fused", "lut")
 
+#: Placeholder accepted everywhere a strategy is: resolves to the
+#: backend's fastest known concrete strategy at engine construction
+#: (``Backend.preferred_strategy``) — engines only ever STORE one of
+#: :data:`STRATEGIES`.
+AUTO_STRATEGY = "auto"
+
 
 def check_strategy(strategy: str) -> str:
-    if strategy not in STRATEGIES:
+    if strategy not in STRATEGIES and strategy != AUTO_STRATEGY:
         raise ValueError(
-            f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+            f"unknown strategy {strategy!r}; one of "
+            f"{STRATEGIES + (AUTO_STRATEGY,)}")
     return strategy
 
 
@@ -64,21 +71,37 @@ def resolve_strategy(strategy, fast: bool) -> str:
     """THE mapping from the back-compat ``fast`` flag to a strategy
     name: an explicit ``strategy`` wins, else ``fast`` picks fused.
     Every entry point that still accepts ``fast=`` resolves through
-    here, so the alias lives in exactly one place."""
+    here, so the alias lives in exactly one place.  (``"auto"`` passes
+    through; it becomes concrete once a backend is known —
+    ``make_engine``.)"""
     if strategy is None:
         strategy = "fused" if fast else "reference"
     return check_strategy(strategy)
 
 
+def _require_concrete(strategy: str) -> str:
+    """Backend methods take CONCRETE strategies only: the "auto"
+    placeholder is resolved by ``make_engine``/``AxEngine.replace``
+    (which know the backend); letting it through here would silently
+    run the slowest reference path."""
+    if strategy == AUTO_STRATEGY:
+        raise ValueError(
+            "strategy='auto' is resolved at engine construction "
+            "(make_engine); Backend methods take one of "
+            f"{STRATEGIES} — or call Backend.preferred_strategy(spec)")
+    return strategy
+
+
 def _fast(strategy: str) -> bool:
     """The ``fast`` flag the behavioral models take (lut handled above)."""
-    return strategy == "fused"
+    return _require_concrete(strategy) == "fused"
 
 
 def _use_lut(spec: AdderSpec, strategy: str) -> bool:
     """Whether this (spec, strategy) dispatches through the table (exact
     kinds have no approximate section — the plain add is the fast path)."""
-    return strategy == "lut" and not get_adder(spec.kind).is_exact
+    return _require_concrete(strategy) == "lut" \
+        and not get_adder(spec.kind).is_exact
 
 
 class FilterStage(NamedTuple):
@@ -106,6 +129,15 @@ class Backend:
 
     def available(self) -> bool:
         return True
+
+    def preferred_strategy(self, spec: AdderSpec) -> str:
+        """The fastest known concrete strategy for this backend — what
+        ``strategy="auto"`` resolves to.  The measured default
+        (BENCH_kernels.json): the algebraically-fused forms win on the
+        XLA/Pallas vector backends, while the table gather wins on the
+        host (but LOSES ~3x on jax — the foot-gun "auto" exists to
+        avoid)."""
+        return "fused"
 
     def add(self, a, b, spec: AdderSpec, *, strategy: str = "reference"):
         """Elementwise approximate add reduced mod 2^N (container dtype)."""
@@ -207,6 +239,14 @@ class NumpyBackend(Backend):
     """Host behavioral simulation: uint64 containers, vectorized numpy."""
 
     name = "numpy"
+
+    def preferred_strategy(self, spec: AdderSpec) -> str:
+        """One table gather beats numpy's many-op bitwise emulation
+        whenever the spec has a compilable LUT (exact kinds and wide
+        LSM sections fall back to the fused form)."""
+        if not get_adder(spec.kind).is_exact and lut_lib.lut_supported(spec):
+            return "lut"
+        return "fused"
 
     def add(self, a, b, spec, *, strategy="reference"):
         a, b = np.asarray(a), np.asarray(b)

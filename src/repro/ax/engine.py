@@ -177,6 +177,9 @@ class AxEngine:
                                               kw.pop("fast"))
         if "strategy" in kw:
             check_strategy(kw["strategy"])
+            if kw["strategy"] == "auto":
+                kw["strategy"] = kw.get("backend", self.backend) \
+                    .preferred_strategy(kw.get("spec", self.spec))
         return dataclasses.replace(self, **kw)
 
     def _require_fmt(self, what: str) -> FixedPointFormat:
@@ -248,7 +251,10 @@ def make_engine(spec: Union[AdderSpec, str],
         a :class:`Backend` instance, or ``None`` to auto-detect.
       fast: back-compat alias for ``strategy="fused"``.
       strategy: ``"reference" | "fused" | "lut"`` execution strategy
-        (all bit-identical).  ``None`` derives it from ``fast``.
+        (all bit-identical), or ``"auto"`` to take the backend's
+        fastest known one (fused on the jax/Pallas backends, lut on
+        numpy where the spec has a compilable table).  ``None`` derives
+        it from ``fast``.
     """
     strategy = resolve_strategy(strategy, fast)
     if isinstance(spec, str):
@@ -262,4 +268,7 @@ def make_engine(spec: Union[AdderSpec, str],
         raise ValueError(
             f"no compilable LUT for {spec.short_name} (lsm_bits too "
             f"wide); use strategy='reference' or 'fused'")
-    return _make_engine_cached(spec, fmt, get_backend(backend), strategy)
+    resolved = get_backend(backend)
+    if strategy == "auto":
+        strategy = resolved.preferred_strategy(spec)
+    return _make_engine_cached(spec, fmt, resolved, strategy)

@@ -8,11 +8,17 @@ through a :mod:`repro.ax` engine (fused multi-operand accumulation and
 multi-stage ``filter_chain`` passes — one VMEM-resident Pallas kernel
 per separable chain, not K elementwise dispatches), a plan compiler
 (:mod:`repro.imgproc.plan`) that chains operators into ONE jitted
-pipeline dispatch, a workload registry that hosts the operators, the
-stock pipelines and the FFT->IFFT reconstruction formerly one-off in
-``repro.image.pipeline``, and a corpus runner that sweeps
-{adder kinds} x {workloads} x {image batch} into PSNR/SSIM/throughput
-tables (``benchmarks/bench_imgproc.py``).
+pipeline dispatch — in the stage-requant mode of PR 3 or end-to-end in
+the fixed-point integer domain (``requant="fused"``, each operator's
+raw :class:`~repro.imgproc.ops.QForm`) — a halo-aware tile streamer
+(:mod:`repro.imgproc.tiles`) that runs any plan over megapixel images
+in bounded memory, bit-identical to untiled execution, a workload
+registry that hosts the operators, the stock pipelines and the
+FFT->IFFT reconstruction formerly one-off in ``repro.image.pipeline``,
+and a corpus runner that sweeps {adder kinds} x {workloads} x {image
+batch} into PSNR/SSIM/throughput tables plus an async double-buffered
+stream executor (``run_streaming``) for steady-state megapixel
+throughput (``benchmarks/bench_imgproc.py``).
 
     from repro.imgproc import make_image_engine, box_blur, run_corpus
 
@@ -27,12 +33,14 @@ from repro.imgproc.corpus import (  # noqa: F401
     CorpusResult,
     format_table,
     run_corpus,
+    run_streaming,
     synthetic_batch,
 )
 from repro.imgproc.ops import (  # noqa: F401
     IMAGE_N_BITS,
     OPERATORS,
     ImageOp,
+    QForm,
     blend,
     box_blur,
     brightness,
@@ -48,9 +56,15 @@ from repro.imgproc.ops import (  # noqa: F401
 )
 from repro.imgproc.plan import (  # noqa: F401
     PIPELINES,
+    REQUANT_MODES,
     CompiledPipeline,
     compile_pipeline,
+    fused_psnr_gate,
     run_pipeline,
+)
+from repro.imgproc.tiles import (  # noqa: F401
+    compile_tiled,
+    run_tiled,
 )
 from repro.imgproc.workloads import (  # noqa: F401
     WORKLOADS,
@@ -62,10 +76,11 @@ from repro.imgproc.workloads import (  # noqa: F401
 
 __all__ = [
     "CompiledPipeline", "CorpusResult", "IMAGE_N_BITS", "ImageOp",
-    "OPERATORS", "PIPELINES", "WORKLOADS", "Workload", "blend", "box_blur",
-    "brightness", "compile_pipeline", "downsample2x", "format_table",
+    "OPERATORS", "PIPELINES", "QForm", "REQUANT_MODES", "WORKLOADS",
+    "Workload", "blend", "box_blur", "brightness", "compile_pipeline",
+    "compile_tiled", "downsample2x", "format_table", "fused_psnr_gate",
     "gaussian_blur", "get_operator", "get_workload", "img_add",
     "make_image_engine", "operator_names", "register_operator",
-    "register_workload", "run_corpus", "run_pipeline", "sharpen", "sobel",
-    "synthetic_batch", "workload_names",
+    "register_workload", "run_corpus", "run_pipeline", "run_streaming",
+    "run_tiled", "sharpen", "sobel", "synthetic_batch", "workload_names",
 ]

@@ -13,9 +13,11 @@ float reference with PSNR/SSIM plus measured throughput.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,6 +60,30 @@ def _score(ref: np.ndarray, out: np.ndarray) -> Tuple[float, float]:
     return float(np.mean(ps)), float(np.mean(ss))
 
 
+# The float-reference goldens are pure functions of (workload, batch,
+# kwargs) and the quality columns only ever compare adder kinds against
+# the SAME golden, so they are cached across ``run_corpus`` calls (the
+# benchmark suite sweeps the same batch through many strategy/requant
+# configurations; megapixel float64 references are the expensive part).
+_GOLDEN_CACHE: dict = {}
+
+
+def _golden(wl, batch: np.ndarray, kw: dict) -> np.ndarray:
+    key = (wl.name, batch.shape, str(batch.dtype),
+           hashlib.sha1(np.ascontiguousarray(batch)).hexdigest(),
+           tuple(sorted(kw.items())))
+    ref = _GOLDEN_CACHE.get(key)
+    if ref is None:
+        ref = _GOLDEN_CACHE[key] = wl.reference(batch, **kw)
+    return ref
+
+
+def clear_golden_cache() -> None:
+    """Drop the cached float-reference goldens (frees megapixel-sized
+    float64 arrays after a large sweep)."""
+    _GOLDEN_CACHE.clear()
+
+
 def run_corpus(kinds: Optional[Sequence[str]] = None,
                workloads: Optional[Sequence[str]] = None,
                batch: Optional[np.ndarray] = None,
@@ -81,9 +107,16 @@ def run_corpus(kinds: Optional[Sequence[str]] = None,
 
     ``strategy`` picks the adder evaluation path (reference / fused /
     lut — bit-identical, so PSNR/SSIM are unchanged; only throughput
-    moves).  ``workload_kw`` maps a workload name to extra kwargs for
-    that workload only (e.g. ``{"blend": {"alpha": 0.25}}``), so
-    per-workload options never leak into the other cells of the sweep.
+    moves — or "auto" for the backend's fastest).  ``workload_kw`` maps
+    a workload name to extra kwargs for that workload only (e.g.
+    ``{"blend": {"alpha": 0.25}}``, or ``{"pipe_blur_sharpen_down":
+    {"requant": "fused"}}`` to run a pipeline cell in the integer
+    domain), so per-workload options never leak into the other cells
+    of the sweep.
+
+    Float-reference goldens are cached across calls (see
+    :func:`clear_golden_cache`) — sweeping the same batch through many
+    kinds/strategies/requant modes computes each golden once.
     """
     from repro.core.specs import TABLE1_KINDS
     kinds = tuple(kinds) if kinds is not None else tuple(TABLE1_KINDS)
@@ -101,7 +134,10 @@ def run_corpus(kinds: Optional[Sequence[str]] = None,
     for name in workloads:
         wl = get_workload(name)
         kw = workload_kw.get(name, {})
-        ref = wl.reference(batch, **kw)
+        # requant is an execution knob: both modes score against ONE
+        # golden, so it never splits (or misses) the golden cache.
+        ref = _golden(wl, batch,
+                      {k: v for k, v in kw.items() if k != "requant"})
         # The backend this workload will actually resolve: operator
         # workloads auto-detect, the host FFT defaults to numpy.
         if backend is not None:
@@ -127,6 +163,63 @@ def run_corpus(kinds: Optional[Sequence[str]] = None,
                 band=quality_band(s), mpix_per_s=pixels / dt / 1e6,
                 seconds=dt))
     return rows
+
+
+# ------------------------------------------------ throughput runner --
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Steady-state throughput of a streamed run.
+
+    ``seconds`` covers the whole stream wall-clock (first dispatch to
+    last result on the host); ``mpix_per_s`` is input megapixels over
+    that window — the number a serving deployment sees, transfer and
+    host round-trips included."""
+
+    outputs: List[np.ndarray]
+    seconds: float
+    pixels: int
+
+    @property
+    def mpix_per_s(self) -> float:
+        return self.pixels / self.seconds / 1e6
+
+
+def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
+                  depth: int = 2) -> StreamResult:
+    """Async double-buffered executor: dispatch batch ``i+1`` BEFORE
+    blocking on batch ``i``'s result.
+
+    jax dispatch is asynchronous: ``fn(batch)`` returns a device array
+    future almost immediately and the host only blocks when the value
+    is materialized (``np.asarray``).  A naive loop serializes
+    host-side work (input staging, output copy, python) with device
+    compute; this runner keeps up to ``depth`` batches in flight, so
+    the device starts batch ``i+1`` while the host drains batch ``i`` —
+    the steady-state pipeline the ROADMAP's serving story needs.  With
+    ``depth=1`` it degrades to the naive blocking loop (the benchmark's
+    comparison baseline).
+
+    ``fn`` is any compiled callable returning device (or host) arrays —
+    a :class:`~repro.imgproc.plan.CompiledPipeline` or a tiled executor
+    from :func:`repro.imgproc.tiles.compile_tiled`.  Outputs are
+    returned in order, materialized on the host.
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1; got {depth}")
+    pending: collections.deque = collections.deque()
+    outputs: List[np.ndarray] = []
+    pixels = 0
+    t0 = time.perf_counter()
+    for batch in batches:
+        pixels += int(np.prod(np.shape(batch)))
+        pending.append(fn(batch))
+        while len(pending) >= depth:
+            outputs.append(np.asarray(pending.popleft()))
+    while pending:
+        outputs.append(np.asarray(pending.popleft()))
+    return StreamResult(outputs=outputs,
+                        seconds=time.perf_counter() - t0, pixels=pixels)
 
 
 def format_table(rows: Sequence[CorpusResult]) -> str:

@@ -37,7 +37,7 @@ from repro.ax.backends import FilterStage
 from repro.ax.engine import AxEngine, make_engine
 from repro.core.specs import AdderSpec
 from repro.imgproc import reference
-from repro.numerics.fixed_point import FixedPointFormat, dequantize, quantize
+from repro.numerics.fixed_point import FixedPointFormat, quantize
 
 #: Default image datapath width: the paper's N=16 (m=8, k=4) instance.
 IMAGE_N_BITS = 16
@@ -85,34 +85,72 @@ def _q(img, fmt: FixedPointFormat):
     return quantize(jnp.asarray(img, jnp.float32), fmt)
 
 
-def _finish(x):
-    """Round half up and saturate to uint8 (matches reference._finish)."""
-    return jnp.clip(jnp.floor(x + 0.5), 0, 255).astype(jnp.uint8)
 
 
 # ----------------------------------------------------------- registry --
 
 @dataclasses.dataclass(frozen=True)
+class QForm:
+    """The raw Q-domain form of an operator: ``fn(q, ax, **kw) -> q_out``.
+
+    The scale/headroom contract the plan compiler chains on:
+
+    - input: signed int32 containers at ``in_frac`` fractional bits
+      holding pixel values in [0, 255] (so ``q <= 255 << in_frac``, the
+      headroom every operator's accumulation analysis assumes);
+    - output: signed int32 containers at ``out_frac`` fractional bits,
+      NOT yet saturated — the caller (the fused-requant chain) clamps to
+      ``[0, 255 << out_frac]`` between stages and rounds/clips to uint8
+      exactly once at pipeline exit.
+
+    ``halo`` is the spatial receptive-field radius in input pixels and
+    ``down`` the integer output downscale factor — the geometry the tile
+    streamer (:mod:`repro.imgproc.tiles`) sizes overlaps from.
+
+    ``exact`` records whether the float operator is EXACTLY
+    quantize -> fn -> round/clip.  True for every built-in operator
+    (normalizations are power-of-two rounding shifts, and box_blur's /9
+    carries :data:`_BOX_NORM_BITS` guard bits so its integer quotient
+    can never round differently from the float division); custom
+    operators whose q-form only approximates their float path should
+    register ``exact=False`` — the fused-requant PSNR gate
+    (:func:`repro.imgproc.plan.fused_psnr_gate`) is what admits them.
+    """
+
+    fn: Callable
+    in_frac: int
+    out_frac: int
+    halo: int = 0
+    down: int = 1
+    exact: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class ImageOp:
     """One registered operator: the approximate implementation paired
-    with its ideal float reference (``n_inputs`` images each)."""
+    with its ideal float reference (``n_inputs`` images each) and, when
+    available, its raw Q-domain form (:class:`QForm`) for requant-free
+    pipeline chaining."""
 
     name: str
     fn: Callable
     reference: Callable
     n_inputs: int = 1
+    qform: Optional[QForm] = None
 
 
 OPERATORS: Dict[str, ImageOp] = {}
 
 
-def register_operator(name: str, reference_fn: Callable, n_inputs: int = 1):
-    """Decorator pairing an approximate operator with its reference."""
+def register_operator(name: str, reference_fn: Callable, n_inputs: int = 1,
+                      qform: Optional[QForm] = None):
+    """Decorator pairing an approximate operator with its reference
+    (and optionally its raw Q-domain form)."""
 
     def deco(fn: Callable) -> Callable:
         if name in OPERATORS:
             raise ValueError(f"operator {name!r} already registered")
-        OPERATORS[name] = ImageOp(name, fn, reference_fn, n_inputs)
+        OPERATORS[name] = ImageOp(name, fn, reference_fn, n_inputs, qform)
         return fn
 
     return deco
@@ -131,19 +169,55 @@ def operator_names() -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------- operators --
+#
+# Each operator is written as a raw Q-domain core (the QForm, integer
+# in -> integer out) plus a float wrapper (quantize -> core ->
+# ``_finish_q``) — the wrapper is the standalone operator the corpus
+# and the stage-requant pipelines run; the core is what integer-domain
+# ("fused"-requant) pipelines chain directly.  Every wrapper is
+# bit-identical to the pre-QForm float operators: the normalizations
+# are power-of-two rounding shifts, sobel's /4 is absorbed into its
+# declared output scale, and box_blur's /9 rounds in integer with
+# enough guard bits that the float path can never differ.
 
-@register_operator("box_blur", reference.box_blur)
-def box_blur(img, ax: AxEngine):
-    """3x3 box blur, separable: ONE two-stage filter chain (a single
-    VMEM-resident multi-pass kernel on the Pallas backends).
+def _finish_q(v, frac_bits: int):
+    """Round half up from ``frac_bits`` and saturate to uint8 — the
+    integer form of ``_finish(dequantize(v, fmt))``, exact whenever the
+    Q value fits int32 (floor((v + half) >> f) == floor(v/2^f + 0.5))."""
+    if frac_bits:
+        v = (v + (1 << (frac_bits - 1))) >> frac_bits
+    return jnp.clip(v, 0, 255).astype(jnp.uint8)
 
-    Headroom: 9 * 255 * 2^3 = 18360 < 2^15, so both passes accumulate
-    unnormalized; the /9 normalization is one exact scale at the end."""
+
+#: Extra fractional bits carried by box_blur's integer /9 quotient.  At
+#: Q16.3 the 9x box sum v <= 18360; emitting round(v * 2^7 / 9) at
+#: 3 + 7 = 10 fractional bits keeps the quotient's rounding error below
+#: 2^-11 gray while the true value v/72 is never closer than 1/144 to a
+#: half-gray boundary without landing on it exactly (2v and 144t + 72
+#: are both integers), so the later round-to-gray can never flip — the
+#: integer form is bit-identical to the float32 /9.0 normalization.
+_BOX_NORM_BITS = 7
+
+
+def _box_blur_q(q, ax: AxEngine):
+    """Headroom: 9 * 255 * 2^3 = 18360 < 2^15, so both passes accumulate
+    unnormalized; the /9 normalization is one exact rounded integer
+    division at the end (see :data:`_BOX_NORM_BITS`), v * 128 < 2^22."""
     e = _with_frac(ax, _F_SEP)
-    q = _q(img, e.fmt)
     v = e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 1, 1)),
                            FilterStage(-2, (-1, 0, 1), (1, 1, 1))))
-    return _finish(dequantize(v, e.fmt) / 9.0)
+    return ((v << _BOX_NORM_BITS) + 4) // 9  # round(v * 2^7 / 9), v >= 0
+
+
+@register_operator("box_blur", reference.box_blur,
+                   qform=QForm(_box_blur_q, _F_SEP,
+                               _F_SEP + _BOX_NORM_BITS, halo=1))
+def box_blur(img, ax: AxEngine):
+    """3x3 box blur, separable: ONE two-stage filter chain (a single
+    VMEM-resident multi-pass kernel on the Pallas backends)."""
+    e = _with_frac(ax, _F_SEP)
+    return _finish_q(_box_blur_q(_q(img, e.fmt), ax),
+                     _F_SEP + _BOX_NORM_BITS)
 
 
 def _gauss3(e: AxEngine, q):
@@ -154,91 +228,131 @@ def _gauss3(e: AxEngine, q):
                               FilterStage(-2, (-1, 0, 1), (1, 2, 1), 2)))
 
 
-@register_operator("gaussian_blur", reference.gaussian_blur)
+def _gaussian_blur_q(q, ax: AxEngine):
+    return _gauss3(_with_frac(ax, _F_SEP), q)
+
+
+@register_operator("gaussian_blur", reference.gaussian_blur,
+                   qform=QForm(_gaussian_blur_q, _F_SEP, _F_SEP, halo=1))
 def gaussian_blur(img, ax: AxEngine):
     """3x3 binomial (Gaussian) blur: separable (1, 2, 1)/4 passes, each
     one fused weighted accumulation with an exact rounding shift."""
     e = _with_frac(ax, _F_SEP)
-    return _finish(dequantize(_gauss3(e, _q(img, e.fmt)), e.fmt))
+    return _finish_q(_gaussian_blur_q(_q(img, e.fmt), ax), _F_SEP)
 
 
-@register_operator("sharpen", reference.sharpen)
-def sharpen(img, ax: AxEngine, amount: int = 1):
-    """Unsharp mask: ``(1 + amount) * img - amount * blur`` as one
+def _sharpen_q(q, ax: AxEngine, amount: int = 1):
+    """Unsharp mask core: ``(1 + amount) * img - amount * blur`` as one
     weighted approximate pair-add on top of the Gaussian pyramid."""
     if not 0 <= amount <= 15:
         # (1 + amount) * 255 * 2^_F_SEP must stay below 2^15
         raise ValueError(f"amount must be in [0, 15] (Q16.{_F_SEP} "
                          f"headroom); got {amount}")
     e = _with_frac(ax, _F_SEP)
-    q = _q(img, e.fmt)
-    s = e.scaled_add(q, _gauss3(e, q), 1 + amount, -amount)
-    return _finish(dequantize(s, e.fmt))
+    return e.scaled_add(q, _gauss3(e, q), 1 + amount, -amount)
 
 
-@register_operator("sobel", reference.sobel)
+@register_operator("sharpen", reference.sharpen,
+                   qform=QForm(_sharpen_q, _F_SEP, _F_SEP, halo=1))
+def sharpen(img, ax: AxEngine, amount: int = 1):
+    """Unsharp mask: ``(1 + amount) * img - amount * blur`` as one
+    weighted approximate pair-add on top of the Gaussian pyramid."""
+    e = _with_frac(ax, _F_SEP)
+    return _finish_q(_sharpen_q(_q(img, e.fmt), ax, amount), _F_SEP)
+
+
+def _sobel_q(q, ax: AxEngine):
+    """Sobel core.  The |Gx| + |Gy| magnitude carries the 4x gradient
+    gain, so its Q-form output is declared at ``_F_SOBEL + 2`` fractional
+    bits — the /4 normalization is absorbed into the scale contract
+    instead of rounding early."""
+    e = _with_frac(ax, _F_SOBEL)
+    gx = e.filter_chain(q, (FilterStage(-2, (-1, 0, 1), (1, 2, 1)),
+                            FilterStage(-1, (1, -1), (1, -1))))
+    gy = e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 2, 1)),
+                            FilterStage(-2, (1, -1), (1, -1))))
+    return e.scaled_add(jnp.abs(gx), jnp.abs(gy))
+
+
+@register_operator("sobel", reference.sobel,
+                   qform=QForm(_sobel_q, _F_SOBEL, _F_SOBEL + 2, halo=1))
 def sobel(img, ax: AxEngine):
     """Sobel edge magnitude |Gx| + |Gy| (the L1 merge is itself an
     approximate add), each gradient one smooth(1,2,1) x diff(+1,-1)
     two-stage filter chain."""
     e = _with_frac(ax, _F_SOBEL)
-    q = _q(img, e.fmt)
-    gx = e.filter_chain(q, (FilterStage(-2, (-1, 0, 1), (1, 2, 1)),
-                            FilterStage(-1, (1, -1), (1, -1))))
-    gy = e.filter_chain(q, (FilterStage(-1, (-1, 0, 1), (1, 2, 1)),
-                            FilterStage(-2, (1, -1), (1, -1))))
-    mag = e.scaled_add(jnp.abs(gx), jnp.abs(gy))
-    return _finish(dequantize(mag, e.fmt) / 4.0)
+    return _finish_q(_sobel_q(_q(img, e.fmt), ax), _F_SOBEL + 2)
 
 
-@register_operator("add", reference.img_add, n_inputs=2)
+def _img_add_q(qa, qb, ax: AxEngine):
+    return _with_frac(ax, _F_ADD).scaled_add(qa, qb)
+
+
+@register_operator("add", reference.img_add, n_inputs=2,
+                   qform=QForm(_img_add_q, _F_ADD, _F_ADD))
 def img_add(a, b, ax: AxEngine):
     """Saturating image add (exposure stacking): one approximate add
     per pixel.  Exact for the accurate kind (510 * 2^6 fits Q16.6)."""
     e = _with_frac(ax, _F_ADD)
-    s = e.scaled_add(_q(a, e.fmt), _q(b, e.fmt))
-    return _finish(dequantize(s, e.fmt))
+    return _finish_q(_img_add_q(_q(a, e.fmt), _q(b, e.fmt), ax), _F_ADD)
 
 
-@register_operator("blend", reference.blend, n_inputs=2)
-def blend(a, b, ax: AxEngine, alpha: float = 0.5):
-    """Alpha blend with a 6-bit quantized alpha: one weighted
-    approximate pair-add, then an exact rounding shift.  At alpha = 0.5
-    the accurate kind is bit-identical to the float reference."""
+def _blend_q(qa, qb, ax: AxEngine, alpha: float = 0.5):
     if not 0.0 <= alpha <= 1.0:
         raise ValueError(f"alpha must be in [0, 1] (the weighted sum "
                          f"must fit the 16-bit datapath); got {alpha}")
     e = _with_frac(ax, 0)
     wa = int(round(alpha * (1 << _ALPHA_BITS)))
-    s = e.scaled_add(_q(a, e.fmt), _q(b, e.fmt),
-                     wa, (1 << _ALPHA_BITS) - wa, shift=_ALPHA_BITS)
-    return _finish(dequantize(s, e.fmt))
+    return e.scaled_add(qa, qb, wa, (1 << _ALPHA_BITS) - wa,
+                        shift=_ALPHA_BITS)
 
 
-@register_operator("brightness", reference.brightness)
-def brightness(img, ax: AxEngine, delta: float = 37.0):
-    """Brightness adjust: one approximate add of a constant plane.
+@register_operator("blend", reference.blend, n_inputs=2,
+                   qform=QForm(_blend_q, 0, 0))
+def blend(a, b, ax: AxEngine, alpha: float = 0.5):
+    """Alpha blend with a 6-bit quantized alpha: one weighted
+    approximate pair-add, then an exact rounding shift.  At alpha = 0.5
+    the accurate kind is bit-identical to the float reference."""
+    e = _with_frac(ax, 0)
+    return _finish_q(_blend_q(_q(a, e.fmt), _q(b, e.fmt), ax, alpha), 0)
 
-    Runs at Q16.2 (not Q16.6): with 6 fractional bits the m=8 LSM error
-    stays below half a gray level and every kind rounds lossless; the
-    coarser split keeps the adder families distinguishable."""
+
+def _brightness_q(q, ax: AxEngine, delta: float = 37.0):
+    """Runs at Q16.2 (not Q16.6): with 6 fractional bits the m=8 LSM
+    error stays below half a gray level and every kind rounds lossless;
+    the coarser split keeps the adder families distinguishable."""
     if not -255.0 <= delta <= 255.0:
         raise ValueError(f"delta must be in [-255, 255]; got {delta}")
     e = _with_frac(ax, _F_BRIGHT)
-    q = _q(img, e.fmt)
     qd = jnp.full_like(q, int(round(delta * e.fmt.scale)))
-    return _finish(dequantize(e.scaled_add(q, qd), e.fmt))
+    return e.scaled_add(q, qd)
 
 
-@register_operator("downsample2x", reference.downsample2x)
-def downsample2x(img, ax: AxEngine):
-    """2x box downsampling: the four phase planes of each 2x2 quad are
-    one fused 4-term accumulation with an exact /4 rounding shift."""
+@register_operator("brightness", reference.brightness,
+                   qform=QForm(_brightness_q, _F_BRIGHT, _F_BRIGHT))
+def brightness(img, ax: AxEngine, delta: float = 37.0):
+    """Brightness adjust: one approximate add of a constant plane
+    (Q16.2 so the LSM error is not sub-LSB)."""
+    e = _with_frac(ax, _F_BRIGHT)
+    return _finish_q(_brightness_q(_q(img, e.fmt), ax, delta), _F_BRIGHT)
+
+
+def _downsample2x_q(q, ax: AxEngine):
+    """2x box core: the four phase planes of each 2x2 quad are one fused
+    4-term accumulation with an exact /4 rounding shift."""
     e = _with_frac(ax, _F_DOWN)
-    q = _q(img, e.fmt)
     h = q.shape[-2] & ~1
     w = q.shape[-1] & ~1
     q = q[..., :h, :w]
     phases = jnp.stack([q[..., 0::2, 0::2], q[..., 0::2, 1::2],
                         q[..., 1::2, 0::2], q[..., 1::2, 1::2]])
-    return _finish(dequantize(e.accumulate_signed(phases, shift=2), e.fmt))
+    return e.accumulate_signed(phases, shift=2)
+
+
+@register_operator("downsample2x", reference.downsample2x,
+                   qform=QForm(_downsample2x_q, _F_DOWN, _F_DOWN, down=2))
+def downsample2x(img, ax: AxEngine):
+    """2x box downsampling: the four phase planes of each 2x2 quad are
+    one fused 4-term accumulation with an exact /4 rounding shift."""
+    e = _with_frac(ax, _F_DOWN)
+    return _finish_q(_downsample2x_q(_q(img, e.fmt), ax), _F_DOWN)

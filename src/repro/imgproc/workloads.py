@@ -106,7 +106,9 @@ def _operator_workload(op: ops_lib.ImageOp) -> Workload:
             if op.n_inputs == 2:
                 return np.asarray(op.fn(imgs, _pair(imgs), ax, **kw))
             return np.asarray(op.fn(imgs, ax, **kw))
-        fn = _jitted(kind, ax.backend.name, strategy,
+        # ax.strategy is the RESOLVED strategy ("auto" made concrete),
+        # so the placeholder and its concrete spelling share one trace.
+        fn = _jitted(kind, ax.backend.name, ax.strategy,
                      tuple(sorted(kw.items())))
         x = jnp.asarray(imgs)
         if op.n_inputs == 2:
@@ -140,13 +142,17 @@ def _pipeline_workload(name: str, stages) -> Workload:
                 f"specs of repro.imgproc.plan.PIPELINES")
 
     def run(imgs, kind="haloc_axa", backend=None, fast=False,
-            strategy=None, **kw):
+            strategy=None, requant="stage", **kw):
         from repro.imgproc.plan import run_pipeline
         _reject_kw(kw)
         return run_pipeline(stages, imgs, kind=kind, backend=backend,
-                            fast=fast, strategy=strategy)
+                            fast=fast, strategy=strategy, requant=requant)
 
-    def reference(imgs, **kw):
+    def reference(imgs, requant="stage", **kw):
+        # requant is an execution knob (both modes score against the
+        # SAME golden), accepted so corpus workload_kw like
+        # {"pipe_...": {"requant": "fused"}} reaches run() unchanged.
+        del requant
         _reject_kw(kw)
         x = np.asarray(imgs)
         for st in stages:

@@ -1,0 +1,48 @@
+"""Tests for the benchmark trajectory merge (append/update, never
+lose) and the CI guard script."""
+
+import json
+
+from benchmarks.run import merge_records, record_key
+
+
+R1 = {"op": "a", "backend": "jax", "kind": "loa",
+      "mpix_per_s": 1.0, "wall_ms": 10.0}
+R2 = {"op": "b", "backend": "jax", "batch": "4x64x64",
+      "mpix_per_s": 2.0, "wall_ms": 20.0}
+
+
+def test_record_key_ignores_metrics():
+    fresher = dict(R1, mpix_per_s=9.0, wall_ms=1.0, psnr=30.0)
+    assert record_key(R1) == record_key(fresher)
+    assert record_key(R1) != record_key(R2)
+    assert record_key(R2) != record_key(dict(R2, batch="8x128x128"))
+
+
+def test_merge_updates_in_place_and_appends():
+    fresher = dict(R1, mpix_per_s=9.0)
+    merged = merge_records([R1, R2], [fresher])
+    assert len(merged) == 2
+    by = {record_key(r): r for r in merged}
+    assert by[record_key(R1)]["mpix_per_s"] == 9.0
+    new = {"op": "c", "mpix_per_s": 3.0}
+    merged = merge_records(merged, [new])
+    assert len(merged) == 3  # append-only growth: nothing lost
+
+
+def test_merge_handles_unhashable_values():
+    rec = dict(R1, tile=[256, 256])  # lists are json-encoded in the key
+    merged = merge_records([rec], [dict(rec, mpix_per_s=5.0)])
+    assert len(merged) == 1 and merged[0]["mpix_per_s"] == 5.0
+
+
+def test_check_trajectory_detects_loss(tmp_path, monkeypatch):
+    import benchmarks.check_trajectory as ct
+
+    committed = [R1, R2]
+    monkeypatch.setattr(ct, "committed", lambda path: committed)
+    path = tmp_path / "BENCH_test.json"
+    path.write_text(json.dumps([R1, R2, {"op": "c", "mpix_per_s": 3.0}]))
+    assert ct.check(str(path)) == 0
+    path.write_text(json.dumps([R2]))  # R1 lost
+    assert ct.check(str(path)) == 1
