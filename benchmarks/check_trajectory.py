@@ -50,7 +50,8 @@ def check(path: str) -> int:
 
 
 def main(argv) -> int:
-    paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json"]
+    paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json",
+                     "BENCH_table1.json"]
     return max((check(p) for p in paths), default=0)
 
 

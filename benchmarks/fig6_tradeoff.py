@@ -1,12 +1,19 @@
 """Fig 6: SSIM vs normalized switching energy per adder — the paper's
-headline trade-off plot (HALOC-AxA: lowest energy at high-quality SSIM)."""
+headline trade-off plot (HALOC-AxA: lowest energy at high-quality SSIM)
+— extended (PR 5) into a full design-space Pareto sweep: every
+registered kind x N in {8, 16, 32} x all valid (m, k), pairing EXACT
+closed-form error metrics (``repro.ax.analytics``) with the calibrated
+hardware cost model (``repro.core.hwcost``).  A few hundred exact
+points per width makes the frontier a computation, not a sampling
+campaign; the full point cloud lands in ``BENCH_table1.json``.
+"""
 
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.hwcost import switching_energy_fj
+from repro.core.hwcost import delay_ns, switching_energy_fj, transistor_count
 from repro.core.specs import TABLE1_KINDS, paper_spec
 from repro.image.pipeline import reconstruct, synthetic_image
 from repro.image.quality import ssim
@@ -35,5 +42,72 @@ def run(size: int = 256) -> List[str]:
             for k, e, s, us in rows]
 
 
+def pareto(
+    n_bits: Sequence[int] = (8, 16, 32),
+    max_lsm: Optional[int] = None,
+    frontier_print: int = 12,
+) -> Tuple[List[str], List[Dict]]:
+    """Exact-error / hardware-cost sweep over the whole design space.
+
+    One record per configuration (kind, N, m, k): exact
+    MED/MRED/NMED/ER/WCE plus modeled energy/delay/transistors.  The
+    printed frontier is energy-ascending with strictly improving NMED —
+    the deployment menu the paper's Section-III partition rule asks
+    for.  Tables are built transiently (``cache_tables=False``): the
+    sweep retains O(2^m) stats per config, never the 2^{2m} tables.
+    """
+    from repro.ax import get_adder
+    from repro.ax.analytics import design_space, exact_error_metrics_sweep
+    out: List[str] = []
+    records: List[Dict] = []
+    t0 = time.perf_counter()
+    specs = design_space(n_bits=n_bits, max_lsm=max_lsm)
+    reports = exact_error_metrics_sweep(specs, cache_tables=False)
+    dt_err = time.perf_counter() - t0
+    by_n: Dict[int, list] = {n: [] for n in n_bits}
+    for spec, rep in zip(specs, reports):
+        hw = {
+            "energy_fj": switching_energy_fj(spec),
+            "delay_ns": delay_ns(spec),
+            "transistors": transistor_count(spec),
+        }
+        records.append({
+            "op": "pareto", "kind": spec.kind, "N": spec.n_bits,
+            "m": 0 if get_adder(spec.kind).is_exact else spec.lsm_bits,
+            "k": spec.effective_const_bits,
+            "med": rep.med, "mred": rep.mred, "nmed": rep.nmed,
+            "er": rep.error_rate, "wce": rep.wce, **hw,
+        })
+        by_n[spec.n_bits].append((spec, rep, hw["energy_fj"]))
+    dt = time.perf_counter() - t0
+    print(f"\n== Design-space Pareto sweep (exact error x hw cost) ==")
+    print(f"{len(specs)} configurations ({len(n_bits)} widths), exact "
+          f"error in {dt_err:.2f}s, total {dt:.2f}s")
+    for n in n_bits:
+        cells = sorted(by_n[n], key=lambda c: c[2])
+        frontier = []
+        best_nmed = float("inf")
+        for spec, rep, e in cells:
+            if rep.nmed < best_nmed:
+                best_nmed = rep.nmed
+                frontier.append((spec, rep, e))
+        print(f"\n-- N={n}: {len(cells)} points, Pareto frontier "
+              f"{len(frontier)} (energy ascending, NMED improving) --")
+        shown = frontier[:frontier_print]
+        for spec, rep, e in shown:
+            name = (f"{spec.kind}" if get_adder(spec.kind).is_exact else
+                    f"{spec.kind} m={spec.lsm_bits} "
+                    f"k={spec.effective_const_bits}")
+            print(f"  {name:24s} E={e:7.2f} fJ  NMED={rep.nmed:.3e} "
+                  f"ER={rep.error_rate:.4f}")
+        if len(frontier) > len(shown):
+            print(f"  ... {len(frontier) - len(shown)} more frontier "
+                  f"points (all in BENCH_table1.json)")
+        out.append(f"fig6_pareto/N{n},{dt / len(n_bits) * 1e6:.0f},"
+                   f"points={len(cells)};frontier={len(frontier)}")
+    return out, records
+
+
 if __name__ == "__main__":
     run()
+    pareto()

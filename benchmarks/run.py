@@ -4,11 +4,15 @@ Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables
 on stderr-adjacent stdout sections) and writes the machine-readable perf
 trajectory:
 
-- ``BENCH_kernels.json``  — kernel/strategy micro-bench + the Table-I
-  Monte-Carlo sweep timings (op, backend, strategy, MPix/s, wall-ms).
+- ``BENCH_kernels.json``  — kernel/strategy micro-bench timings
+  (op, backend, strategy, MPix/s, wall-ms).
 - ``BENCH_imgproc.json``  — the imgproc corpus, the plan-fused vs
   sequential pipeline comparison, and the megapixel tiled/streamed
   throughput cells with the requant PSNR gate.
+- ``BENCH_table1.json``   — the EXACT Table-1 error rows, the
+  exact-vs-Monte-Carlo sweep timings/speedups, and the full
+  design-space Pareto point cloud (exact error x hw cost per
+  (kind, N, m, k)).
 
 The JSON files are a TRAJECTORY: every run MERGES into the committed
 file instead of overwriting it — records whose identity (all
@@ -33,7 +37,10 @@ import sys
 METRIC_FIELDS = frozenset({
     "mpix_per_s", "wall_ms", "msamples_per_s", "psnr", "ssim",
     "psnr_stage", "psnr_fused", "psnr_delta_db", "bit_identical",
-    "seconds",
+    "seconds", "speedup",
+    # exact error analytics + hw cost model (BENCH_table1.json)
+    "med", "mred", "nmed", "er", "wce",
+    "energy_fj", "delay_ns", "power_uw", "transistors",
 })
 
 
@@ -73,10 +80,14 @@ def main() -> None:
     lines = []
     lines += table1_hw.run()
     t1_lines, t1_records = table1_error.run(
-        n_samples=1_000_000 if quick else 10_000_000, compare=True)
+        n_samples=1_000_000 if quick else 10_000_000, validate=True,
+        mc_rounds=1 if quick else 2)
     lines += t1_lines
     lines += fig5_image.run(size=256 if quick else 512)
     lines += fig6_tradeoff.run(size=256)
+    par_lines, par_records = fig6_tradeoff.pareto(
+        max_lsm=8 if quick else None)
+    lines += par_lines
     img_lines, img_records = bench_imgproc.run(
         n_images=4 if quick else 8, size=64 if quick else 128,
         mega_images=1 if quick else 4,
@@ -85,8 +96,9 @@ def main() -> None:
     kern_lines, kern_records = bench_kernels.run()
     lines += kern_lines
     lines += roofline.run()
-    _dump("BENCH_kernels.json", kern_records + t1_records)
+    _dump("BENCH_kernels.json", kern_records)
     _dump("BENCH_imgproc.json", img_records)
+    _dump("BENCH_table1.json", t1_records + par_records)
     print("\n== CSV (name,us_per_call,derived) ==")
     for ln in lines:
         print(ln)

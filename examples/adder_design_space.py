@@ -3,11 +3,17 @@ and map the accuracy/energy Pareto frontier — the knob a deployment would
 tune per application (paper Section III: "The target application's
 tolerance level ... must be carefully considered when determining m").
 
+Every point is EXACT (closed-form analytics, `repro.ax.analytics`) —
+no Monte-Carlo sampling, so the frontier is a computation, not an
+experiment.  The full multi-kind version of this sweep is
+`benchmarks/fig6_tradeoff.py` (`pareto()`).
+
     PYTHONPATH=src python examples/adder_design_space.py
 """
 
+from repro.ax import MAX_LUT_LSM_BITS
 from repro.core.hwcost import switching_energy_fj
-from repro.core.metrics import simulate_error_metrics
+from repro.core.metrics import exact_error_metrics
 from repro.core.specs import AdderSpec, paper_spec
 
 
@@ -16,13 +22,14 @@ def main():
           f"{'E/Eacc':>7s}")
     e_acc = switching_energy_fj(AdderSpec(kind="accurate"))
     rows = []
-    for m in (6, 8, 10, 12, 14):
+    for m in (6, 8, 10, 12):  # MAX_LUT_LSM_BITS caps the exact engine
+        assert m <= MAX_LUT_LSM_BITS
         for k in (0, m // 4, m // 2):
             if k > m - 2:
                 continue
             spec = AdderSpec(kind="haloc_axa", n_bits=32, lsm_bits=m,
                              const_bits=k)
-            rep = simulate_error_metrics(spec, n_samples=300_000)
+            rep = exact_error_metrics(spec)
             e = switching_energy_fj(spec)
             rows.append((m, k, rep.med, rep.nmed, e, e / e_acc))
             print(f"{m:3d} {k:3d} {rep.med:10.1f} {rep.nmed:11.3e} "

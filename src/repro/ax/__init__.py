@@ -17,6 +17,10 @@ Four pillars:
    ``ax = make_engine(spec, fmt=..., backend=..., strategy=...)`` with
    ``.add``, ``.add_signed``, ``.sum``, ``.residual_add``,
    ``.filter_chain``, ``.matmul``, ``.butterfly``.
+5. **Exact error analytics** (:mod:`repro.ax.analytics`):
+   ``exact_error_metrics(spec)`` — closed-form MED/MRED/NMED/ER/WCE
+   from the delta table composed with the exact high-sum PMF; the
+   ground truth the Monte-Carlo simulator only estimates.
 
 Only the registry is imported eagerly (it must be importable while
 ``repro.core.adders`` registers the builtin family); the engine and
@@ -52,13 +56,24 @@ _LAZY = {
     "compile_lut": "repro.ax.lut",
     "error_delta_table": "repro.ax.lut",
     "lut_supported": "repro.ax.lut",
+    "ErrorMoments": "repro.ax.analytics",
+    "MAX_COMPOSE_BITS": "repro.ax.analytics",
+    "analytics_supported": "repro.ax.analytics",
+    "design_space": "repro.ax.analytics",
+    "exact_error_metrics": "repro.ax.analytics",
+    "exact_error_metrics_sweep": "repro.ax.analytics",
+    "exact_error_moments": "repro.ax.analytics",
 }
 
 __all__ = [
-    "AUTO_STRATEGY", "AdderImpl", "AxEngine", "Backend", "FilterStage",
-    "MAX_LUT_LSM_BITS",
-    "STRATEGIES", "available_backends", "compile_lut", "const_kinds",
-    "default_backend_name", "error_delta_table", "get_adder",
+    "AUTO_STRATEGY", "AdderImpl", "AxEngine", "Backend", "ErrorMoments",
+    "FilterStage",
+    "MAX_COMPOSE_BITS", "MAX_LUT_LSM_BITS",
+    "STRATEGIES", "analytics_supported", "available_backends",
+    "compile_lut", "const_kinds",
+    "default_backend_name", "design_space", "error_delta_table",
+    "exact_error_metrics", "exact_error_metrics_sweep",
+    "exact_error_moments", "get_adder",
     "get_backend", "lut_supported", "make_engine", "register_adder",
     "register_backend", "registered_kinds", "table1_kinds",
     "unregister_adder",

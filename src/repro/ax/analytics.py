@@ -1,0 +1,475 @@
+"""Exact closed-form error analytics for approximate adders.
+
+Every LUT-compilable adder's full-sum error ``delta = approx(a, b) -
+(a + b)`` is a pure function of the low ``m`` bits of each operand
+(:func:`repro.ax.lut.error_delta_table`).  Under uniform N-bit
+operands the paper's Table-1 metrics are therefore finite expectations
+over that ``2^m x 2^m`` table — computable EXACTLY, no Monte-Carlo:
+
+.. code-block:: text
+
+    MED  = 4^-m  * sum |delta|                 (high bits never matter)
+    ER   = 4^-m  * #{delta != 0}
+    WCE  = max |delta|
+    NMED = MED / (2^{N+1} - 2)
+
+MRED composes the table with the exact high-sum PMF.  Writing the
+exact sum as ``S = h*2^m + l`` with ``l = a_low + b_low`` and
+``h = a_high + b_high`` (independent of ``delta``), and grouping the
+table by low-sum class,
+
+.. code-block:: text
+
+    MRED = 4^-N * sum_l  U[l] * R(l)
+    U[l] = sum of |delta| over low pairs with a_low + b_low = l
+    R(l) = sum_h  c(h) / (h*2^m + l)        c(h) = triangular counts
+                                            (2^{N-m+1}-1 terms)
+
+with the ``S = 0`` pair (``a = b = 0``) excluded, matching the
+simulator's guard.  ``R`` is evaluated two ways:
+
+- ``method="compose"`` — exact integer composition: scatter
+  ``c(h) * U[l]`` into per-exact-sum numerators ``T[S]`` (all integer,
+  overflow-free for N <= 20) and reduce ``sum_S T[S]/S`` with
+  :func:`math.fsum`, which is *exactly rounded* and therefore
+  order-independent: the result is BIT-IDENTICAL to brute-force
+  enumeration over all ``4^N`` operand pairs reduced the same way
+  (``repro.core.metrics.exhaustive_error_metrics``).
+- ``method="closed"`` — digamma closed form.  The triangular weights
+  are piecewise linear in ``h``, so each low-sum class reduces to
+  harmonic-number differences: with ``q = 2^m``, ``M = 2^{N-m}`` and
+  ``x = l/q``,
+
+  .. code-block:: text
+
+      R(l) = 1/q + (q-l)/q^2 * (psi(M+x) - psi(x))
+                 + ((2M-1)q+l)/q^2 * (psi(2M-1+x) - psi(M+x))
+
+  (``psi`` = scipy's digamma; second moments use trigamma the same
+  way).  This is what makes N=32 exact: the 2^23-term high reduction
+  collapses to three special-function calls per class, ~2e-15 relative
+  error against direct summation.
+
+The heavy reduction — ``|delta|``, the nonzero count, the max and the
+two low-sum histograms over the ``4^m`` table — runs vectorized on
+numpy or jit-compiled jax (``backend=``).  Both backends produce the
+same *integers* (integer reductions are order-independent), and the
+final float composition is shared host code, so the two paths are
+bit-identical by construction.  Tables are built transiently by
+default in sweeps wider than the hot-path cache should hold
+(``cache_tables``): a design-space pass over hundreds of (kind, m, k)
+keeps only ``O(2^m)`` stats per config, never the tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ax.lut import (
+    MAX_LUT_LSM_BITS,
+    abs_error_table,
+    error_delta_table_nocache,
+)
+from repro.core.metrics import ErrorReport
+from repro.core.specs import AdderSpec
+
+#: ``method="auto"`` composes exactly up to this width and uses the
+#: digamma closed form above it (the exact path scatters into a
+#: ``2^{N+1}``-entry numerator array).
+MAX_COMPOSE_BITS = 16
+
+#: Hard feasibility bound for ``method="compose"`` (int64 numerators
+#: and a 2^{N+1}-entry fsum stay exact and affordable to here).
+_COMPOSE_LIMIT_BITS = 20
+
+_METHODS = ("auto", "compose", "closed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorMoments:
+    """First and second exact moments of the error distributions.
+
+    ``var_ed`` / ``var_red`` are the per-sample variances of ``|ED|``
+    and ``|ED|/S`` under uniform operands — what a Monte-Carlo run's
+    mean estimator fluctuates with (``sigma/sqrt(n)``); used by the
+    ``--validate`` cross-check and the 4-sigma acceptance tests.
+    """
+
+    spec: AdderSpec
+    med: float
+    mred: float
+    nmed: float
+    error_rate: float
+    wce: int
+    var_ed: float
+    var_red: float
+
+
+@dataclasses.dataclass(frozen=True)
+class _LowStats:
+    """Exact integer aggregates of one ``2^m x 2^m`` delta table.
+
+    The squared-error spectrum ``u2`` is only materialized when second
+    moments are requested (``exact_error_moments``): the metrics
+    themselves never touch it, and the extra histogram pass would
+    otherwise double the hot sweep's cost.
+    """
+
+    sum_abs: int                    # sum |delta|
+    n_err: int                      # #{delta != 0}
+    wce: int                        # max |delta|
+    u1: np.ndarray                  # int64[2^{m+1}-1]: sum |delta| per l
+    u2: Optional[np.ndarray] = None  # int64[...]: sum delta^2 per l
+
+
+def analytics_supported(spec: AdderSpec) -> bool:
+    """Whether ``spec`` has exact closed-form metrics (same reach as the
+    LUT strategy: every kind, ``lsm_bits <= MAX_LUT_LSM_BITS``)."""
+    from repro.ax.lut import lut_supported
+    return lut_supported(spec)
+
+
+def _spectrum_scan(values: np.ndarray, m: int) -> np.ndarray:
+    """``U[l] = sum of values over table entries with a_low+b_low = l``.
+
+    The padded-reshape trick: writing the ``2^m x 2^m`` table into the
+    left half of a ``2^m x 2^{m+1}`` zero buffer and re-viewing the
+    flat buffer with row length ``2^{m+1}-1`` shifts row ``a`` left by
+    ``a``, so the antidiagonals line up as COLUMNS — one sequential
+    axis-0 reduction instead of a 4^m-element scatter (bincount), ~3x
+    less memory traffic on the hot Table-1 sweep.  Exact: int64
+    accumulation of integer values.
+    """
+    q = 1 << m
+    x = np.zeros((q, 2 * q), dtype=np.int32)
+    x[:, :q] = values.reshape(q, q)
+    z = x.ravel()[:q * (2 * q - 1)].reshape(q, 2 * q - 1)
+    return z.sum(axis=0, dtype=np.int64)
+
+
+def _low_stats_numpy(d: np.ndarray, m: int, moments: bool) -> _LowStats:
+    u1 = _spectrum_scan(d, m)
+    u2 = None
+    if moments:
+        d32 = d.astype(np.int32)
+        u2 = _spectrum_scan(d32 * d32, m)  # delta^2 < 2^{2m+2} fits int32
+    return _LowStats(
+        sum_abs=int(u1.sum()),
+        n_err=int(np.count_nonzero(d)), wce=int(d.max(initial=0)),
+        u1=u1, u2=u2)
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_low_stats_fn(m: int, moments: bool):
+    """Jitted table reduction (int32-safe without x64: ``delta^2`` is
+    scatter-added as 16-bit halves, recombined exactly on host)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(d):
+        idx = jnp.arange(d.shape[0], dtype=jnp.int32)
+        lsum = (idx >> m) + (idx & ((1 << m) - 1))
+        nbins = 2 * (1 << m) - 1
+        zeros = jnp.zeros(nbins, jnp.int32)
+        u1 = zeros.at[lsum].add(d)
+        n_err = jnp.sum((d != 0).astype(jnp.int32))
+        wce = jnp.max(d, initial=0)
+        if not moments:
+            return u1, n_err, wce
+        d2 = d * d
+        u2_lo = zeros.at[lsum].add(d2 & 0xFFFF)
+        u2_hi = zeros.at[lsum].add(d2 >> 16)
+        return u1, n_err, wce, u2_lo, u2_hi
+
+    return f
+
+
+def _low_stats_jax(d: np.ndarray, m: int, moments: bool) -> _LowStats:
+    import jax.numpy as jnp
+    res = _jax_low_stats_fn(m, moments)(jnp.asarray(d, dtype=jnp.int32))
+    u1, n_err, wce = res[:3]
+    u1 = np.asarray(u1).astype(np.int64)
+    u2 = None
+    if moments:
+        u2 = (np.asarray(res[3 + 1]).astype(np.int64) << 16) \
+            + np.asarray(res[3]).astype(np.int64)
+    return _LowStats(
+        sum_abs=int(u1.sum()),
+        n_err=int(n_err), wce=int(wce), u1=u1, u2=u2)
+
+
+def _low_stats(spec: AdderSpec, backend: str, cache_tables: bool,
+               moments: bool = False) -> _LowStats:
+    # |delta| is all the stats need: the cached uint16 view shares the
+    # LUT registry cache with the Monte-Carlo fast path; transient
+    # builds (breadth sweeps) take the |.| of a throwaway delta table.
+    d = (abs_error_table(spec) if cache_tables
+         else np.abs(error_delta_table_nocache(spec)))
+    if backend == "numpy":
+        return _low_stats_numpy(d, spec.lsm_bits, moments)
+    if backend == "jax":
+        return _low_stats_jax(d, spec.lsm_bits, moments)
+    raise ValueError(f"unknown analytics backend {backend!r}; "
+                     f"expected 'numpy' or 'jax'")
+
+
+def _high_counts(n_bits: int, m: int) -> np.ndarray:
+    """Triangular high-sum counts ``c(h) = #{(a_h, b_h): a_h+b_h = h}``."""
+    big = 1 << (n_bits - m)
+    h = np.arange(2 * big - 1, dtype=np.int64)
+    return np.where(h < big, h + 1, 2 * big - 1 - h)
+
+
+@functools.lru_cache(maxsize=None)
+def _reciprocal_tables(n_bits: int, m: int) -> Tuple[np.ndarray, np.ndarray]:
+    """``R1(l) = sum_h c(h)/(h*q+l)`` and ``R2(l) = sum_h c(h)/(h*q+l)^2``
+    in closed form (digamma/trigamma; module docstring), ``l = 0``
+    excluding the ``S = 0`` term.  float64, read-only, cached per
+    (N, m) — shared by every kind and k."""
+    from scipy.special import digamma, polygamma
+    q = float(1 << m)
+    big = float(1 << (n_bits - m))
+    top = 2.0 * big - 1.0
+    l = np.arange(1, 2 * (1 << m) - 1, dtype=np.float64)
+    x = l / q
+    ps_x, ps_mx, ps_tx = digamma(x), digamma(big + x), digamma(top + x)
+    pg_x, pg_mx, pg_tx = (polygamma(1, x), polygamma(1, big + x),
+                          polygamma(1, top + x))
+    r1 = (1.0 / q
+          + (q - l) / q ** 2 * (ps_mx - ps_x)
+          + (top * q + l) / q ** 2 * (ps_tx - ps_mx))
+    r2 = ((ps_mx - ps_x) / q ** 2
+          + (q - l) / q ** 3 * (pg_x - pg_mx)
+          + (top * q + l) / q ** 3 * (pg_mx - pg_tx)
+          - (ps_tx - ps_mx) / q ** 2)
+    # l = 0: harmonic forms H_n = psi(n+1) + gamma (the gammas cancel;
+    # written out so M = 1, where the sums are empty, degrades to 0).
+    g = np.euler_gamma
+
+    def hsum(n):          # H_n
+        return digamma(n + 1.0) + g
+
+    def h2sum(n):         # sum_{i<=n} 1/i^2
+        return polygamma(1, 1.0) - polygamma(1, n + 1.0)
+
+    r1_0 = (hsum(big - 1) + top * (hsum(top - 1) - hsum(big - 1))) / q
+    r2_0 = (hsum(big - 1) + h2sum(big - 1)
+            + top * (h2sum(top - 1) - h2sum(big - 1))
+            - (hsum(top - 1) - hsum(big - 1))) / q ** 2
+    r1 = np.concatenate([[r1_0], r1])
+    r2 = np.concatenate([[r2_0], r2])
+    r1.flags.writeable = False
+    r2.flags.writeable = False
+    return r1, r2
+
+
+def _compose_numerators(u: np.ndarray, n_bits: int, m: int) -> np.ndarray:
+    """Exact per-exact-sum numerators ``T[S] = sum_h c(h) * u[S - h*q]``
+    (the triangular convolution, int64, strided scatter)."""
+    q = 1 << m
+    cnt = _high_counts(n_bits, m)
+    t = np.zeros((cnt.size - 1) * q + u.size, dtype=np.int64)
+    for l in range(u.size):
+        if u[l]:
+            t[l:l + cnt.size * q:q] += cnt * int(u[l])
+    return t
+
+
+def _ratio_sum_compose(u: np.ndarray, n_bits: int, m: int,
+                       power: int) -> float:
+    """``sum_{S>=1} T[S]/S^power`` with an exactly-rounded fsum."""
+    t = _compose_numerators(u, n_bits, m)
+    s = np.arange(t.size, dtype=np.float64)
+    nz = np.flatnonzero(t[1:] != 0) + 1
+    return math.fsum((t[nz] / s[nz] ** power).tolist())
+
+
+def _ratio_sum_closed(u: np.ndarray, n_bits: int, m: int,
+                      power: int) -> float:
+    r = _reciprocal_tables(n_bits, m)[power - 1]
+    return math.fsum((u * r).tolist())
+
+
+def _resolve_method(method: str, n_bits: int) -> str:
+    if method not in _METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of "
+                         f"{_METHODS}")
+    if method == "auto":
+        return "compose" if n_bits <= MAX_COMPOSE_BITS else "closed"
+    if method == "compose" and n_bits > _COMPOSE_LIMIT_BITS:
+        raise ValueError(
+            f"method='compose' needs n_bits <= {_COMPOSE_LIMIT_BITS} "
+            f"(2^{n_bits + 1}-entry numerator array); use 'closed'")
+    return method
+
+
+def _ratio_sum(u: np.ndarray, n_bits: int, m: int, method: str,
+               power: int = 1) -> float:
+    if method == "compose":
+        return _ratio_sum_compose(u, n_bits, m, power)
+    return _ratio_sum_closed(u, n_bits, m, power)
+
+
+def _check_spec(spec: AdderSpec) -> None:
+    if not analytics_supported(spec):
+        raise ValueError(
+            f"no exact analytics for {spec.short_name}: lsm_bits="
+            f"{spec.lsm_bits} > MAX_LUT_LSM_BITS={MAX_LUT_LSM_BITS} has "
+            f"no compilable delta table; use the Monte-Carlo simulator")
+
+
+def _zero_report(spec: AdderSpec) -> ErrorReport:
+    return ErrorReport(spec=spec, n_samples=4 ** spec.n_bits, med=0.0,
+                       mred=0.0, nmed=0.0, error_rate=0.0, wce=0,
+                       exact=True)
+
+
+def exact_error_metrics(
+    spec: AdderSpec,
+    backend: str = "numpy",
+    method: str = "auto",
+    cache_tables: bool = True,
+) -> ErrorReport:
+    """Exact MED/MRED/NMED/ER/WCE under uniform operands (no sampling).
+
+    Returns the same :class:`~repro.core.metrics.ErrorReport` rows as
+    the Monte-Carlo simulator, with ``exact=True`` and ``n_samples``
+    equal to the full population ``4^N``.  ``backend`` picks where the
+    ``4^m``-entry table reduction runs (``"numpy"`` or jit-compiled
+    ``"jax"`` — bit-identical).  ``method`` picks the MRED reduction
+    (module docstring); ``"auto"`` composes exactly for
+    ``N <= MAX_COMPOSE_BITS`` (16) and uses the digamma closed form
+    above.  With ``cache_tables=False`` the delta table is built
+    transiently — right for breadth sweeps that would otherwise pin
+    every table.
+    """
+    from repro.ax.registry import get_adder
+    if get_adder(spec.kind).is_exact:
+        return _zero_report(spec)
+    _check_spec(spec)
+    method = _resolve_method(method, spec.n_bits)
+    stats = _low_stats(spec, backend, cache_tables)
+    return _report_from_stats(spec, stats, method)
+
+
+def _report_from_stats(spec: AdderSpec, stats: _LowStats,
+                       method: str) -> ErrorReport:
+    n, m = spec.n_bits, spec.lsm_bits
+    pop = float(4 ** n)
+    # med/er: exact integers scaled by the 4^{N-m} high multiplicity,
+    # then ONE correctly-rounded float division — bit-for-bit what the
+    # brute-force enumeration computes.
+    mult = 4 ** (n - m)
+    med = float(stats.sum_abs * mult) / pop
+    mred = _ratio_sum(stats.u1, n, m, method) / pop
+    max_out = float((1 << (n + 1)) - 2)
+    return ErrorReport(
+        spec=spec, n_samples=4 ** n, med=med, mred=mred,
+        nmed=med / max_out,
+        error_rate=float(stats.n_err * mult) / pop,
+        wce=stats.wce, exact=True)
+
+
+def exact_error_moments(
+    spec: AdderSpec,
+    backend: str = "numpy",
+    method: str = "auto",
+    cache_tables: bool = True,
+) -> ErrorMoments:
+    """Exact metrics plus per-sample variances of ``|ED|`` and ``|ED|/S``.
+
+    The second moments come from the same machinery with squared
+    weights/reciprocals (``U2[l] = sum delta^2``, ``R2(l) = sum
+    c(h)/S^2``); they put exact error bars on any Monte-Carlo run
+    (``sigma/sqrt(n)``) — see ``benchmarks/table1_error.py
+    --validate``.
+    """
+    from repro.ax.registry import get_adder
+    if get_adder(spec.kind).is_exact:
+        return ErrorMoments(spec=spec, med=0.0, mred=0.0, nmed=0.0,
+                            error_rate=0.0, wce=0, var_ed=0.0, var_red=0.0)
+    _check_spec(spec)
+    method = _resolve_method(method, spec.n_bits)
+    stats = _low_stats(spec, backend, cache_tables, moments=True)
+    rep = _report_from_stats(spec, stats, method)
+    n, m = spec.n_bits, spec.lsm_bits
+    pop = float(4 ** n)
+    ed2 = float(int(stats.u2.sum()) * 4 ** (n - m)) / pop
+    red2 = _ratio_sum(stats.u2, n, m, method, power=2) / pop
+    return ErrorMoments(
+        spec=spec, med=rep.med, mred=rep.mred, nmed=rep.nmed,
+        error_rate=rep.error_rate, wce=rep.wce,
+        var_ed=max(ed2 - rep.med ** 2, 0.0),
+        var_red=max(red2 - rep.mred ** 2, 0.0))
+
+
+def exact_error_metrics_sweep(
+    specs: Iterable[AdderSpec],
+    backend: str = "numpy",
+    method: str = "auto",
+    cache_tables: bool = True,
+) -> List[ErrorReport]:
+    """Exact reports for MANY specs — any mix of kinds AND widths.
+
+    There is no operand stream to share (nothing is sampled), so unlike
+    the Monte-Carlo sweep the specs need not agree on ``n_bits``.  Low
+    stats are memoized *within the call* under the table identity
+    ``(kind, m, k)``: an N in {8, 16, 32} design-space sweep reduces
+    each table once, whatever ``cache_tables`` says.
+    """
+    from repro.ax.registry import get_adder
+    specs = list(specs)
+    memo: Dict[Tuple[str, int, int], _LowStats] = {}
+    out = []
+    for spec in specs:
+        if get_adder(spec.kind).is_exact:
+            out.append(_zero_report(spec))
+            continue
+        _check_spec(spec)
+        key = (spec.kind, spec.lsm_bits, spec.effective_const_bits)
+        if key not in memo:
+            memo[key] = _low_stats(spec, backend, cache_tables)
+        out.append(_report_from_stats(
+            spec, memo[key], _resolve_method(method, spec.n_bits)))
+    return out
+
+
+def design_space(
+    n_bits: Sequence[int] = (8, 16, 32),
+    kinds: Optional[Sequence[str]] = None,
+    max_lsm: Optional[int] = None,
+    include_exact: bool = True,
+) -> Tuple[AdderSpec, ...]:
+    """Every analytics-supported configuration: registered kinds x
+    widths x all valid (m, k) partitions (m capped at ``max_lsm``,
+    default ``MAX_LUT_LSM_BITS``).
+
+    This is the full Pareto-sweep input of
+    ``benchmarks/fig6_tradeoff.py``: a few hundred configurations per
+    width, each exactly solvable in milliseconds.
+    """
+    from repro.ax.registry import get_adder, registered_kinds
+    if kinds is None:
+        kinds = registered_kinds()
+    cap = MAX_LUT_LSM_BITS if max_lsm is None else max_lsm
+    out = []
+    for n in n_bits:
+        for kind in kinds:
+            entry = get_adder(kind)
+            if entry.is_exact:
+                if include_exact:
+                    out.append(AdderSpec(kind=kind, n_bits=n))
+                continue
+            for m in range(entry.min_lsm_bits, min(n, cap) + 1):
+                ks = (range(0, m - entry.const_margin + 1)
+                      if entry.const_section else (0,))
+                for k in ks:
+                    out.append(AdderSpec(kind=kind, n_bits=n, lsm_bits=m,
+                                         const_bits=k))
+    return tuple(out)

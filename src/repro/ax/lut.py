@@ -45,26 +45,41 @@ def lut_supported(spec: AdderSpec) -> bool:
     return spec.lsm_bits <= MAX_LUT_LSM_BITS
 
 
-@functools.lru_cache(maxsize=None)
-def compile_lut(spec: AdderSpec) -> np.ndarray:
-    """The packed low-part table for ``spec``.
-
-    Returns a read-only uint16 array of ``2^{2m}`` entries indexed by
-    ``(a_low << m) | b_low``; each entry packs ``low_bits | cin << m``
-    — which, read as an integer, IS the approximate sum of the two
-    low parts.  Cached per spec: the same ``AdderSpec`` (by equality)
-    always yields the same array object.
-    """
+def _validate_lut_spec(spec: AdderSpec) -> None:
     from repro.ax.registry import get_adder
-    entry = get_adder(spec.kind)
-    if entry.is_exact:
+    if get_adder(spec.kind).is_exact:
         raise ValueError(
             f"{spec.kind!r} is exact; the lut strategy uses the plain add")
-    m = spec.lsm_bits
-    if m > MAX_LUT_LSM_BITS:
+    if spec.lsm_bits > MAX_LUT_LSM_BITS:
         raise ValueError(
-            f"lsm_bits={m} exceeds MAX_LUT_LSM_BITS={MAX_LUT_LSM_BITS} "
-            f"(2^{2 * m} entries); use the reference or fused strategy")
+            f"lsm_bits={spec.lsm_bits} exceeds MAX_LUT_LSM_BITS="
+            f"{MAX_LUT_LSM_BITS} (2^{2 * spec.lsm_bits} entries); use the "
+            f"reference or fused strategy")
+
+
+def _canonical(spec: AdderSpec) -> AdderSpec:
+    """``spec`` reduced to the table identity ``(kind, m, effective k)``.
+
+    The low tables are pure functions of ``(kind, lsm_bits,
+    effective_const_bits)``: the LUT contract already requires every
+    registered impl to add the high parts (bits >= m) exactly, so the
+    table built from low-bits-only operands cannot depend on N — and
+    kinds without a constant section ignore ``const_bits`` entirely.
+    Caching under the canonical spec lets N=8/16/32 design-space sweeps
+    share one table per (kind, m, k) and keeps differing-``const_bits``
+    spellings of a const-less kind from pinning duplicate tables.
+    """
+    k = spec.effective_const_bits
+    if spec.n_bits != spec.lsm_bits or spec.const_bits != k:
+        return spec.replace(n_bits=spec.lsm_bits, const_bits=k)
+    return spec
+
+
+def _build_packed(spec: AdderSpec) -> np.ndarray:
+    """Uncached table build (see :func:`compile_lut` for the contract)."""
+    from repro.ax.registry import get_adder
+    _validate_lut_spec(spec)
+    m = spec.lsm_bits
     # uint32 lanes: every intermediate of the reference impls fits in
     # m+2 <= 14 bits here, and halving the container width halves the
     # (memory-bound) table build time.
@@ -74,9 +89,35 @@ def compile_lut(spec: AdderSpec) -> np.ndarray:
     # With zero high parts the reference impl returns (cin << m) | low:
     # exactly the packed entry.  cin <= 1 and low < 2^m, so m <= 15
     # fits uint16 (guaranteed by MAX_LUT_LSM_BITS).
-    packed = entry.impl(a, b, spec).astype(np.uint16)
+    packed = get_adder(spec.kind).impl(a, b, spec).astype(np.uint16)
     packed.flags.writeable = False
     return packed
+
+
+def _delta_from_packed(packed: np.ndarray, m: int) -> np.ndarray:
+    vals = np.arange(1 << m, dtype=np.int64)
+    exact = (vals[:, None] + vals[None, :]).reshape(-1)
+    delta = (packed.astype(np.int64) - exact).astype(np.int32)
+    delta.flags.writeable = False
+    return delta
+
+
+@functools.lru_cache(maxsize=None)
+def compile_lut(spec: AdderSpec) -> np.ndarray:
+    """The packed low-part table for ``spec``.
+
+    Returns a read-only uint16 array of ``2^{2m}`` entries indexed by
+    ``(a_low << m) | b_low``; each entry packs ``low_bits | cin << m``
+    — which, read as an integer, IS the approximate sum of the two
+    low parts.  Cached per canonical spec: the same ``AdderSpec`` (by
+    equality) always yields the same array object, and specs differing
+    only in ``n_bits`` share it (see :func:`_canonical`).
+    """
+    _validate_lut_spec(spec)
+    canon = _canonical(spec)
+    if canon != spec:
+        return compile_lut(canon)
+    return _build_packed(spec)
 
 
 @functools.lru_cache(maxsize=None)
@@ -86,15 +127,24 @@ def error_delta_table(spec: AdderSpec) -> np.ndarray:
     The exact and approximate sums share the high parts (up to the
     speculated carry, which the packed entry already contains), so the
     error of the FULL add is this table gathered at
-    ``(a_low << m) | b_low``.  int32, read-only, cached per spec.
+    ``(a_low << m) | b_low``.  int32, read-only, cached per canonical
+    spec (shared across ``n_bits``, like :func:`compile_lut`).
     """
-    packed = compile_lut(spec)
-    m = spec.lsm_bits
-    vals = np.arange(1 << m, dtype=np.int64)
-    exact = (vals[:, None] + vals[None, :]).reshape(-1)
-    delta = (packed.astype(np.int64) - exact).astype(np.int32)
-    delta.flags.writeable = False
-    return delta
+    canon = _canonical(spec)
+    if canon != spec:
+        return error_delta_table(canon)
+    return _delta_from_packed(compile_lut(spec), spec.lsm_bits)
+
+
+def error_delta_table_nocache(spec: AdderSpec) -> np.ndarray:
+    """Like :func:`error_delta_table` but built transiently, NOT cached.
+
+    Breadth sweeps (``repro.ax.analytics`` over hundreds of (kind, m, k)
+    configurations) reduce each table to a handful of scalars; caching
+    every table would pin gigabytes (an m=12 delta table is 64 MiB).
+    """
+    canon = _canonical(spec)
+    return _delta_from_packed(_build_packed(canon), canon.lsm_bits)
 
 
 @functools.lru_cache(maxsize=None)
@@ -104,6 +154,9 @@ def abs_error_table(spec: AdderSpec) -> np.ndarray:
     The unsigned view of :func:`error_delta_table` (|delta| < 2^{m+1}
     fits uint16 for every compilable m): the Monte-Carlo error sweep
     gathers error distances from this directly."""
+    canon = _canonical(spec)
+    if canon != spec:
+        return abs_error_table(canon)
     ed = np.abs(error_delta_table(spec)).astype(np.uint16)
     ed.flags.writeable = False
     return ed

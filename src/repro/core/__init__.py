@@ -21,8 +21,11 @@ from repro.core.adders import (  # noqa: F401
 from repro.core.metrics import (  # noqa: F401
     ErrorReport,
     error_distances,
+    exact_error_metrics,
+    exact_error_metrics_sweep,
     exhaustive_error_metrics,
     simulate_error_metrics,
+    simulate_error_metrics_sweep,
 )
 
 # ALL_KINDS / TABLE1_KINDS / CONST_KINDS are registry-derived: resolve

@@ -22,6 +22,7 @@ delay, calibrated on those two points.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict
 
 import numpy as np
@@ -65,6 +66,7 @@ class HwReport:
                 "power_uw": self.power_uw}
 
 
+@functools.lru_cache(maxsize=None)
 def _toggle_activity(spec: AdderSpec, n_vectors: int = 20000,
                      seed: int = 11) -> float:
     """Average per-output-bit toggle rate of the adder over a random

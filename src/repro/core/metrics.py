@@ -8,13 +8,19 @@ WCE  = worst-case error distance
 
 The paper evaluates MED and MRED over 10^7 uniform random 32-bit pairs;
 :func:`simulate_error_metrics` reproduces that experiment (vectorized numpy,
-chunked so 10^7 x several adders stays in memory).
+chunked so 10^7 x several adders stays in memory).  For LUT-compilable
+specs the same metrics are available EXACTLY — closed-form expectations
+over the compiled delta table, no sampling — via
+:func:`exact_error_metrics` / :func:`exact_error_metrics_sweep`
+(implemented in :mod:`repro.ax.analytics`; reports carry
+``exact=True`` and ``n_samples = 4^N``, the full population).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional
+import math
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -30,6 +36,9 @@ class ErrorReport:
     nmed: float
     error_rate: float
     wce: int
+    #: True when the row is a closed-form population value (exhaustive
+    #: enumeration or repro.ax.analytics), not a Monte-Carlo estimate.
+    exact: bool = False
 
     def row(self) -> Dict[str, object]:
         return {
@@ -43,6 +52,7 @@ class ErrorReport:
             "NMED": self.nmed,
             "ER": self.error_rate,
             "WCE": self.wce,
+            "exact": self.exact,
         }
 
 
@@ -127,11 +137,46 @@ def simulate_error_metrics(
     )
 
 
+#: Peak-memory budget for one Monte-Carlo sweep chunk's working set.
+#: 192 MiB keeps a reference-strategy N=32 sweep of the seven Table-1
+#: kinds comfortably inside this container's limits while leaving the
+#: chunk large enough that per-chunk Python overhead stays negligible.
+SWEEP_MEMORY_BUDGET = 192 * 2 ** 20
+
+_SWEEP_CHUNK_CAP = 2_000_000     # the historical fixed chunk
+_SWEEP_CHUNK_FLOOR = 131_072
+
+
+def _auto_chunk(n_specs: int, n_distinct_m: int, any_reference: bool,
+                n_bits: int) -> int:
+    """Chunk length sized from what a sweep chunk actually keeps live.
+
+    Retained per sample across the whole chunk: the operand pair (2x
+    uint64), the exact float64 sums, and one gather index per distinct
+    LSM width.  Transient peaks per sample: the |ED| int64 + relative
+    float64 pass (always), the reference-strategy approximate sum and
+    its int64 casts (when any spec bypasses the LUT), and the wide
+    two-word operand generation for N > 32.  The result is capped at
+    the historical fixed chunk (so small sweeps keep their exact
+    operand-stream chunking — reports bit-identical to per-spec runs)
+    and floored so degenerate spec counts still vectorize well.
+    """
+    per_sample = 2 * 8 + 8            # a, b, exact
+    per_sample += 8 * max(n_distinct_m, 1 if n_specs else 0)
+    per_sample += 8 + 8               # ed + ed/exact transient
+    if any_reference:
+        per_sample += 3 * 8           # approx + two int64 casts
+    if n_bits > 32:
+        per_sample += 4 * 8           # hi/lo generation words
+    chunk = SWEEP_MEMORY_BUDGET // per_sample
+    return int(max(min(chunk, _SWEEP_CHUNK_CAP), _SWEEP_CHUNK_FLOOR))
+
+
 def simulate_error_metrics_sweep(
     specs: Iterable[AdderSpec],
     n_samples: int = 10_000_000,
     seed: int = 2025,
-    chunk: int = 2_000_000,
+    chunk: Optional[int] = None,
     strategy: str = "reference",
 ) -> "list[ErrorReport]":
     """Monte-Carlo error metrics for MANY specs over ONE operand stream.
@@ -146,6 +191,13 @@ def simulate_error_metrics_sweep(
     one gather + one division pass (see ``benchmarks/table1_error.py``).
 
     All specs must share ``n_bits`` (the operand stream's width).
+
+    ``chunk=None`` (the default) sizes the chunk from the number of
+    concurrently-accumulated specs and their distinct LSM widths so the
+    chunk working set stays under :data:`SWEEP_MEMORY_BUDGET` (see
+    :func:`_auto_chunk`); narrow sweeps resolve to the historical fixed
+    chunk, so their operand streams — and therefore their reports —
+    stay bit-identical to per-spec :func:`simulate_error_metrics` runs.
     """
     from repro.ax import get_adder  # lazy: core loads before repro.ax
     specs = list(specs)
@@ -158,6 +210,12 @@ def simulate_error_metrics_sweep(
         s: strategy == "lut" and not get_adder(s.kind).is_exact
         for s in specs
     }
+    if chunk is None:
+        chunk = _auto_chunk(
+            n_specs=len(specs),
+            n_distinct_m=len({s.lsm_bits for s in specs if use_lut[s]}),
+            any_reference=not all(use_lut.values()),
+            n_bits=n_bits)
     ed_tables = {}
     if any(use_lut.values()):
         from repro.ax.lut import abs_error_table
@@ -209,7 +267,17 @@ def simulate_error_metrics_sweep(
 
 def exhaustive_error_metrics(spec: AdderSpec,
                              strategy: str = "reference") -> ErrorReport:
-    """Exact metrics by full enumeration — feasible for N <= ~12."""
+    """Exact metrics by full enumeration — feasible for N <= ~12.
+
+    The reductions are canonical population values: MED/ER are exact
+    integer totals with one correctly-rounded float division, and MRED
+    groups the error mass by exact sum S (integer numerators) before an
+    exactly-rounded :func:`math.fsum` over the ratios — order-
+    independent, so it is BIT-IDENTICAL to the closed-form analytics
+    (:mod:`repro.ax.analytics`), which reaches the same multiset of
+    ratios through the low-sum/high-PMF factorization instead of
+    enumeration.
+    """
     n_bits = spec.n_bits
     if n_bits > 12:
         raise ValueError("exhaustive enumeration is limited to N <= 12")
@@ -217,20 +285,62 @@ def exhaustive_error_metrics(spec: AdderSpec,
     a = np.repeat(vals, 1 << n_bits)
     b = np.tile(vals, 1 << n_bits)
     ed = error_distances(a, b, spec, strategy=strategy)
-    exact = (a + b).astype(np.float64)
-    nz = exact > 0
+    s = (a + b).astype(np.int64)
     n = a.size
     max_out = float((1 << (n_bits + 1)) - 2)
-    med = float(ed.sum(dtype=np.float64)) / n
+    med = float(int(ed.sum())) / float(n)
+    # Per-exact-sum numerators T[S] = sum of |ED| over pairs with sum S
+    # (exact: every T[S] is an integer far below 2^53).  The S = 0 pair
+    # (a = b = 0) is excluded from MRED, matching the simulator's guard.
+    t = np.bincount(s, weights=ed.astype(np.float64),
+                    minlength=(1 << (n_bits + 1)) - 1)
+    sums = np.arange(t.size, dtype=np.float64)
+    nz = np.flatnonzero(t[1:] != 0.0) + 1
+    mred = math.fsum((t[nz] / sums[nz]).tolist()) / float(n)
     return ErrorReport(
         spec=spec,
         n_samples=n,
         med=med,
-        mred=float((ed[nz] / exact[nz]).sum(dtype=np.float64)) / n,
+        mred=mred,
         nmed=med / max_out,
-        error_rate=float((ed != 0).sum()) / n,
+        error_rate=float(int((ed != 0).sum())) / float(n),
         wce=int(ed.max(initial=0)),
+        exact=True,
     )
+
+
+def exact_error_metrics(spec: AdderSpec, backend: str = "numpy",
+                        method: str = "auto") -> ErrorReport:
+    """Exact MED/MRED/NMED/ER/WCE in closed form — no sampling.
+
+    Ground truth for any LUT-compilable spec (every registered kind,
+    ``lsm_bits <= repro.ax.MAX_LUT_LSM_BITS``): the metrics are finite
+    expectations over the compiled ``2^m x 2^m`` delta table composed
+    with the exact triangular high-sum PMF, evaluated in milliseconds
+    (see :mod:`repro.ax.analytics` for the formulation and the
+    ``backend``/``method`` knobs).  Replaces the 10^7-sample
+    Monte-Carlo Table-1 runs; the simulator remains as a cross-check
+    (``benchmarks/table1_error.py --validate``).
+    """
+    from repro.ax.analytics import exact_error_metrics as _exact
+    return _exact(spec, backend=backend, method=method)
+
+
+def exact_error_metrics_sweep(
+    specs: Iterable[AdderSpec],
+    backend: str = "numpy",
+    method: str = "auto",
+    cache_tables: bool = True,
+) -> List[ErrorReport]:
+    """Exact reports for many specs (any mix of kinds and widths).
+
+    Design-space sweeps should pass ``cache_tables=False`` so the
+    hundreds of transient delta tables are reduced to ``O(2^m)`` stats
+    and dropped instead of being pinned in the LUT cache.
+    """
+    from repro.ax.analytics import exact_error_metrics_sweep as _sweep
+    return _sweep(specs, backend=backend, method=method,
+                  cache_tables=cache_tables)
 
 
 def summarize(reports: Iterable[ErrorReport]) -> str:

@@ -1,0 +1,223 @@
+"""Tests for the exact closed-form error analytics (``repro.ax.analytics``).
+
+Acceptance (ISSUE 5):
+
+- exact N=8 metrics equal brute-force enumeration over all 2^16
+  operand pairs BIT-FOR-BIT, for every registered kind and every valid
+  (m, k) partition;
+- N=16/32 exact values sit inside a 4-sigma Monte-Carlo confidence
+  interval on a shared seeded stream (sigma from the EXACT second
+  moments);
+- the numpy and jax analytics paths are bit-identical;
+- the digamma closed form agrees with the exact integer composition;
+- the Monte-Carlo sweep's auto-sized chunk respects the memory budget.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.ax import registered_kinds
+from repro.ax.analytics import (
+    MAX_COMPOSE_BITS,
+    design_space,
+    exact_error_metrics,
+    exact_error_metrics_sweep,
+    exact_error_moments,
+)
+from repro.core.metrics import (
+    SWEEP_MEMORY_BUDGET,
+    _auto_chunk,
+    error_distances,
+    exhaustive_error_metrics,
+    simulate_error_metrics_sweep,
+)
+from repro.core.specs import AdderSpec, paper_spec, table1_specs
+
+METRICS = ("med", "mred", "nmed", "error_rate", "wce", "n_samples")
+
+
+def _metrics(report):
+    return tuple(getattr(report, f) for f in METRICS)
+
+
+# ---------------------------------------------------------------------------
+# N=8: bit-for-bit against brute-force enumeration, every kind x (m, k)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", registered_kinds())
+def test_exact_equals_enumeration_n8_all_mk(kind):
+    """Closed-form == exhaustive enumeration (2^16 pairs through the
+    reference impl) to the last bit, for every legal (m, k)."""
+    specs = [s for s in design_space(n_bits=(8,), kinds=(kind,))]
+    assert specs, kind
+    for spec in specs:
+        brute = exhaustive_error_metrics(spec, strategy="reference")
+        got = exact_error_metrics(spec)
+        assert _metrics(got) == _metrics(brute), spec
+        assert got.exact and brute.exact
+
+
+def test_exact_reports_population_size():
+    rep = exact_error_metrics(paper_spec("haloc_axa"))
+    assert rep.n_samples == 4 ** 32
+    assert rep.exact
+    assert rep.row()["exact"] is True
+
+
+def test_exact_kind_zero_report():
+    rep = exact_error_metrics(paper_spec("accurate"))
+    assert (rep.med, rep.mred, rep.error_rate, rep.wce) == (0, 0, 0, 0)
+    assert rep.exact
+
+
+def test_unsupported_width_raises():
+    spec = AdderSpec(kind="loa", n_bits=32, lsm_bits=16)
+    with pytest.raises(ValueError, match="MAX_LUT_LSM_BITS"):
+        exact_error_metrics(spec)
+
+
+# ---------------------------------------------------------------------------
+# N=16 / N=32: 4-sigma Monte-Carlo band on one shared seeded stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_bits,m,k", [(16, 8, 4), (32, 10, 5)])
+def test_exact_inside_mc_confidence_band(n_bits, m, k):
+    """The Monte-Carlo estimate must agree with the exact population
+    value within 4 exact standard errors, metric by metric."""
+    kinds = [kd for kd in registered_kinds() if kd != "accurate"]
+    specs = [AdderSpec(kind=kd, n_bits=n_bits, lsm_bits=m,
+                       const_bits=min(k, m - 2)) for kd in kinds]
+    n = 200_000
+    mc_reports = simulate_error_metrics_sweep(specs, n_samples=n,
+                                              strategy="lut", seed=7)
+    for spec, mc in zip(specs, mc_reports):
+        mo = exact_error_moments(spec)
+        z_med = (mc.med - mo.med) / math.sqrt(mo.var_ed / n)
+        z_mred = (mc.mred - mo.mred) / math.sqrt(mo.var_red / n)
+        er_var = mo.error_rate * (1 - mo.error_rate)
+        z_er = (mc.error_rate - mo.error_rate) / math.sqrt(er_var / n)
+        assert abs(z_med) < 4, (spec, z_med)
+        assert abs(z_mred) < 4, (spec, z_mred)
+        assert abs(z_er) < 4, (spec, z_er)
+        assert mc.wce <= mo.wce, spec
+
+
+def test_moments_match_sampled_variance():
+    """Exact var_ed agrees with the empirical per-sample variance."""
+    spec = paper_spec("haloc_axa")
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 1 << 32, 200_000, dtype=np.uint64)
+    b = rng.integers(0, 1 << 32, 200_000, dtype=np.uint64)
+    ed = error_distances(a, b, spec, strategy="lut").astype(np.float64)
+    mo = exact_error_moments(spec)
+    # var of the sample variance ~ var * sqrt(2/n); 10% is >> 4 sigma
+    assert np.var(ed) == pytest.approx(mo.var_ed, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# backends and methods agree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    paper_spec("haloc_axa"),
+    paper_spec("loa"),
+    AdderSpec(kind="herloa", n_bits=16, lsm_bits=8),
+    AdderSpec(kind="oloca", n_bits=8, lsm_bits=6, const_bits=3),
+])
+def test_numpy_and_jax_paths_bit_identical(spec):
+    ref = exact_error_metrics(spec, backend="numpy")
+    assert exact_error_metrics(spec, backend="jax") == ref
+    assert exact_error_moments(spec, backend="jax") == \
+        exact_error_moments(spec, backend="numpy")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        exact_error_metrics(paper_spec("loa"), backend="fortran")
+
+
+def test_closed_form_matches_exact_composition_n16():
+    """The digamma closed form vs the exact integer composition at the
+    widest composable width: MRED to 1e-12 relative, the integer-exact
+    metrics bit-for-bit."""
+    assert MAX_COMPOSE_BITS >= 16
+    for kind in ("loa", "herloa", "haloc_axa"):
+        spec = AdderSpec(kind=kind, n_bits=16, lsm_bits=8,
+                         const_bits=4 if kind == "haloc_axa" else 0)
+        comp = exact_error_metrics(spec, method="compose")
+        closed = exact_error_metrics(spec, method="closed")
+        assert closed.mred == pytest.approx(comp.mred, rel=1e-12)
+        assert (comp.med, comp.error_rate, comp.wce) == \
+            (closed.med, closed.error_rate, closed.wce)
+
+
+def test_compose_rejected_beyond_limit():
+    with pytest.raises(ValueError, match="compose"):
+        exact_error_metrics(paper_spec("loa"), method="compose")
+    with pytest.raises(ValueError, match="method"):
+        exact_error_metrics(paper_spec("loa"), method="sorcery")
+
+
+# ---------------------------------------------------------------------------
+# sweep semantics
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_per_spec_calls_and_mixes_widths():
+    specs = list(table1_specs()) + [
+        AdderSpec(kind="haloc_axa", n_bits=16, lsm_bits=8, const_bits=4)]
+    got = exact_error_metrics_sweep(specs, cache_tables=False)
+    for spec, rep in zip(specs, got):
+        assert rep == exact_error_metrics(spec), spec
+
+
+def test_sweep_memoizes_stats_across_widths():
+    """N=8/16 reports of one (kind, m, k) share one table reduction —
+    and agree with each other on the width-independent WCE."""
+    specs = [AdderSpec(kind="haloc_axa", n_bits=n, lsm_bits=6,
+                       const_bits=3) for n in (8, 16)]
+    r8, r16 = exact_error_metrics_sweep(specs)
+    assert r8.wce == r16.wce
+    assert r8.med == r16.med  # MED depends only on the low partition
+    assert r8.nmed > r16.nmed  # but the normalization tracks N
+
+
+def test_design_space_is_valid_and_capped():
+    specs = design_space(n_bits=(8, 16), max_lsm=6)
+    assert specs
+    kinds = {s.kind for s in specs}
+    assert kinds == set(registered_kinds())
+    for s in specs:
+        if s.kind != "accurate":
+            assert s.lsm_bits <= 6
+    # AdderSpec construction validates (m, k) — reaching here means
+    # every generated config is legal.
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sweep: auto-sized chunk (memory cap)
+# ---------------------------------------------------------------------------
+
+def test_auto_chunk_respects_budget_and_bounds():
+    # paper config: few specs -> capped at the historical fixed chunk
+    assert _auto_chunk(7, 1, False, 32) == 2_000_000
+    # many concurrently-accumulated gather indexes shrink the chunk...
+    wide = _auto_chunk(100, 30, True, 48)
+    assert wide < 2_000_000
+    per_sample_floor = SWEEP_MEMORY_BUDGET // wide
+    assert per_sample_floor >= 8 * 30  # at least the index arrays
+    # ...but never below the vectorization floor
+    assert _auto_chunk(10_000, 3000, True, 48) == 131_072
+
+
+def test_sweep_auto_chunk_reports_match_fixed_chunk():
+    """With fewer samples than one auto chunk the stream is identical
+    to an explicit-chunk run (same RNG consumption)."""
+    specs = [paper_spec(k) for k in ("loa", "haloc_axa")]
+    auto = simulate_error_metrics_sweep(specs, n_samples=50_000)
+    fixed = simulate_error_metrics_sweep(specs, n_samples=50_000,
+                                         chunk=2_000_000)
+    for x, y in zip(auto, fixed):
+        assert (x.med, x.mred, x.error_rate, x.wce) == \
+            (y.med, y.mred, y.error_rate, y.wce)
