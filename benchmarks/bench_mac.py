@@ -1,0 +1,127 @@
+"""MAC engine benchmarks: multiplier error sweep + conv2d / matmul
+throughput through the approximate-multiplier datapaths.
+
+Three sections, all returning trajectory records for ``BENCH_mac.json``:
+
+1. ``mul_error`` — EXACT error metrics (MED/MRED/NMED/ER/WCE, from
+   ``repro.ax.analytics``) for a representative multiplier menu at
+   N=8: every kind at its default knobs plus the pruning ladder of the
+   truncated family.
+2. ``mac_matmul`` — GMAC/s of the MAC GEMM (products through the
+   approximate multiplier, inter-tile accumulation through the
+   approximate adder) on the jax and Pallas backends, against the
+   exact-product approximate-accumulation GEMM as the baseline.
+3. ``mac_conv2d`` — MPix/s of the 3x3 MAC convolution
+   (``engine.conv2d``) on the jax and Pallas backends.
+
+Pallas runs in interpret mode on CPU — the numbers validate plumbing,
+not TPU perf (same caveat as ``bench_kernels``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.timing import timeit_jax
+from repro.ax import make_engine
+from repro.ax.mul import MulSpec, default_mul_spec, registered_multipliers
+from repro.core.specs import AdderSpec, paper_spec
+from repro.imgproc.workloads import CONV3X3_KERNEL
+from repro.numerics.fixed_point import FixedPointFormat
+
+#: The image-datapath adder (N=16, m=8, k=4) — the accumulator the MAC
+#: workloads pair with an 8-bit multiplier.
+MAC_ADDER = AdderSpec(kind="haloc_axa", n_bits=16, lsm_bits=8,
+                      const_bits=4)
+#: GEMM accumulator: the paper's 32-bit spec (int8 operands, int32 acc).
+GEMM_ADDER = paper_spec("haloc_axa")
+
+
+def _error_menu() -> List[MulSpec]:
+    menu = [default_mul_spec(kind) for kind in registered_multipliers()]
+    menu += [MulSpec("truncated", 8, t) for t in (2, 6, 8)]
+    menu += [MulSpec("broken_array", 8, 6, 3), MulSpec("mitchell", 8, 2)]
+    seen, out = set(), []
+    for m in menu:
+        if m not in seen:
+            seen.add(m)
+            out.append(m)
+    return out
+
+
+def run(quick: bool = False) -> Tuple[List[str], List[Dict]]:
+    import jax.numpy as jnp
+    from repro.ax.analytics import exact_mul_error_metrics
+
+    out: List[str] = []
+    records: List[Dict] = []
+    rng = np.random.default_rng(0)
+
+    # -- 1. exact multiplier error menu ------------------------------
+    print("\n== Multiplier error menu (exact analytics, N=8) ==")
+    print(f"{'multiplier':22s} {'MED':>9s} {'MRED':>10s} {'ER':>7s} "
+          f"{'WCE':>6s}")
+    for spec in _error_menu():
+        rep = exact_mul_error_metrics(spec)
+        records.append({
+            "op": "mul_error", "mul": spec.kind, "N": spec.n_bits,
+            "t": spec.effective_trunc_bits,
+            "v": spec.effective_row_bits,
+            "med": rep.med, "mred": rep.mred, "nmed": rep.nmed,
+            "er": rep.error_rate, "wce": rep.wce,
+        })
+        print(f"{spec.short_name:22s} {rep.med:9.2f} {rep.mred:10.3e} "
+              f"{rep.error_rate:7.4f} {rep.wce:6d}")
+        out.append(f"mac/mul_error_{spec.short_name},0,"
+                   f"MED={rep.med:.3f};MRED={rep.mred:.3e}")
+
+    # -- 2. MAC matmul throughput ------------------------------------
+    m = k = n = 128 if quick else 256
+    a8 = jnp.asarray(rng.integers(-128, 128, (m, k), np.int8))
+    b8 = jnp.asarray(rng.integers(-128, 128, (k, n), np.int8))
+    gmacs = m * k * n / 1e9
+    mul = MulSpec("truncated", 8, 3)
+    print(f"\n== MAC matmul {m}x{k}x{n} (int8, GMAC/s) ==")
+    cells = [("jax", "fused", mul), ("jax", "lut", mul),
+             ("pallas", "fused", mul), ("jax", "fused", None)]
+    for backend, strategy, mspec in cells:
+        eng = make_engine(GEMM_ADDER, backend=backend, strategy=strategy,
+                          mul=mspec)
+        us = timeit_jax(eng.matmul, a8, b8) * 1e6
+        mul_name = mspec.short_name if mspec is not None else "exact"
+        records.append({
+            "op": "mac_matmul", "backend": backend, "strategy": strategy,
+            "mul": mul_name, "mnk": f"{m}x{k}x{n}",
+            "gmac_per_s": gmacs / (us / 1e6), "wall_ms": us / 1e3,
+        })
+        print(f"  {backend:7s} {strategy:6s} mul={mul_name:16s} "
+              f"{gmacs / (us / 1e6):8.4f} GMAC/s  ({us / 1e3:.2f} ms)")
+        out.append(f"mac/matmul_{backend}_{strategy}_{mul_name},{us:.0f},"
+                   f"GMAC/s={gmacs / (us / 1e6):.4f}")
+
+    # -- 3. MAC conv2d throughput ------------------------------------
+    b, size = (2, 128) if quick else (4, 256)
+    imgs = jnp.asarray(rng.integers(0, 256, (b, size, size)), jnp.int32)
+    mpix = b * size * size / 1e6
+    print(f"\n== MAC conv2d 3x3 ({b}x{size}x{size}, MPix/s) ==")
+    for backend, strategy in (("jax", "fused"), ("jax", "lut"),
+                              ("pallas", "fused")):
+        eng = make_engine(MAC_ADDER, fmt=FixedPointFormat(16, 0),
+                          backend=backend, strategy=strategy, mul=mul)
+        us = timeit_jax(eng.conv2d, imgs, CONV3X3_KERNEL) * 1e6
+        records.append({
+            "op": "mac_conv2d", "backend": backend, "strategy": strategy,
+            "mul": mul.short_name, "shape": f"{b}x{size}x{size}",
+            "mpix_per_s": mpix / (us / 1e6), "wall_ms": us / 1e3,
+        })
+        print(f"  {backend:7s} {strategy:6s} "
+              f"{mpix / (us / 1e6):8.2f} MPix/s  ({us / 1e3:.2f} ms)")
+        out.append(f"mac/conv2d_{backend}_{strategy},{us:.0f},"
+                   f"MPix/s={mpix / (us / 1e6):.2f}")
+    return out, records
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -51,7 +51,7 @@ def check(path: str) -> int:
 
 def main(argv) -> int:
     paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json",
-                     "BENCH_table1.json"]
+                     "BENCH_table1.json", "BENCH_mac.json"]
     return max((check(p) for p in paths), default=0)
 
 

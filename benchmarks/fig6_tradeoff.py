@@ -108,6 +108,86 @@ def pareto(
     return out, records
 
 
+def pareto_mul(
+    n_bits: Sequence[int] = (8,),
+    frontier_print: int = 12,
+    mac_adders: Sequence[str] = ("accurate", "haloc_axa"),
+) -> Tuple[List[str], List[Dict]]:
+    """Multiplier/MAC companion sweep: every registered multiplier kind
+    x (t, v) knob setting at the given widths, exact error metrics
+    (``exact_mul_error_metrics_sweep``) against the multiplier area/
+    energy model — one ``pareto_mul`` record per configuration, plus
+    ``pareto_mac`` rows pricing each frontier multiplier behind the
+    paper's adders (serial MAC lane: summed energy/area, chained
+    delay)."""
+    from repro.core.hwcost import mac_report, mul_report
+    from repro.ax.analytics import (
+        exact_mul_error_metrics_sweep, mul_design_space,
+    )
+    out: List[str] = []
+    records: List[Dict] = []
+    t0 = time.perf_counter()
+    specs = mul_design_space(n_bits=n_bits)
+    reports = exact_mul_error_metrics_sweep(specs, cache_tables=False)
+    dt_err = time.perf_counter() - t0
+    by_n: Dict[int, list] = {n: [] for n in n_bits}
+    for spec, rep in zip(specs, reports):
+        hw = mul_report(spec)
+        records.append({
+            "op": "pareto_mul", "kind": spec.kind, "N": spec.n_bits,
+            "t": spec.effective_trunc_bits, "v": spec.effective_row_bits,
+            "med": rep.med, "mred": rep.mred, "nmed": rep.nmed,
+            "er": rep.error_rate, "wce": rep.wce,
+            "energy_fj": hw.energy_fj, "delay_ns": hw.delay_ns,
+            "transistors": hw.transistors,
+        })
+        by_n[spec.n_bits].append((spec, rep, hw))
+    dt = time.perf_counter() - t0
+    print("\n== Multiplier design-space Pareto sweep "
+          "(exact error x hw cost) ==")
+    print(f"{len(specs)} configurations ({len(n_bits)} widths), exact "
+          f"error in {dt_err:.2f}s, total {dt:.2f}s")
+    frontier_specs: List = []
+    for n in n_bits:
+        cells = sorted(by_n[n], key=lambda c: c[2].energy_fj)
+        frontier = []
+        best_nmed = float("inf")
+        for spec, rep, hw in cells:
+            if rep.nmed < best_nmed:
+                best_nmed = rep.nmed
+                frontier.append((spec, rep, hw))
+        frontier_specs.extend(s for s, _, _ in frontier[:3])
+        print(f"\n-- N={n}: {len(cells)} points, Pareto frontier "
+              f"{len(frontier)} (energy ascending, NMED improving) --")
+        shown = frontier[:frontier_print]
+        for spec, rep, hw in shown:
+            print(f"  {spec.short_name:24s} E={hw.energy_fj:7.2f} fJ  "
+                  f"NMED={rep.nmed:.3e} ER={rep.error_rate:.4f}")
+        if len(frontier) > len(shown):
+            print(f"  ... {len(frontier) - len(shown)} more frontier "
+                  f"points (all in BENCH_mac.json)")
+        out.append(f"fig6_pareto_mul/N{n},{dt / len(n_bits) * 1e6:.0f},"
+                   f"points={len(cells)};frontier={len(frontier)}")
+    print("\n-- MAC lanes (multiplier + Table-I adder, serial) --")
+    for kind in mac_adders:
+        aspec = paper_spec(kind)
+        for mspec in frontier_specs:
+            mac = mac_report(aspec, mspec)
+            records.append({
+                "op": "pareto_mac", "adder": kind,
+                "mul": mspec.kind, "mul_N": mspec.n_bits,
+                "mul_t": mspec.effective_trunc_bits,
+                "mul_v": mspec.effective_row_bits,
+                "energy_fj": mac.energy_fj, "delay_ns": mac.delay_ns,
+                "transistors": mac.transistors,
+            })
+            print(f"  {kind:10s} + {mspec.short_name:22s} "
+                  f"E={mac.energy_fj:7.2f} fJ  d={mac.delay_ns:.3f} ns  "
+                  f"T={mac.transistors}")
+    return out, records
+
+
 if __name__ == "__main__":
     run()
     pareto()
+    pareto_mul()

@@ -37,8 +37,8 @@ import sys
 METRIC_FIELDS = frozenset({
     "mpix_per_s", "wall_ms", "msamples_per_s", "psnr", "ssim",
     "psnr_stage", "psnr_fused", "psnr_delta_db", "bit_identical",
-    "seconds", "speedup",
-    # exact error analytics + hw cost model (BENCH_table1.json)
+    "seconds", "speedup", "gmac_per_s",
+    # exact error analytics + hw cost model (BENCH_table1/BENCH_mac)
     "med", "mred", "nmed", "er", "wce",
     "energy_fj", "delay_ns", "power_uw", "transistors",
 })
@@ -75,8 +75,9 @@ def _dump(path: str, records) -> None:
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import (bench_imgproc, bench_kernels, fig5_image,
-                            fig6_tradeoff, roofline, table1_error, table1_hw)
+    from benchmarks import (bench_imgproc, bench_kernels, bench_mac,
+                            fig5_image, fig6_tradeoff, roofline,
+                            table1_error, table1_hw)
     lines = []
     lines += table1_hw.run()
     t1_lines, t1_records = table1_error.run(
@@ -88,6 +89,10 @@ def main() -> None:
     par_lines, par_records = fig6_tradeoff.pareto(
         max_lsm=8 if quick else None)
     lines += par_lines
+    pmul_lines, pmul_records = fig6_tradeoff.pareto_mul()
+    lines += pmul_lines
+    mac_lines, mac_records = bench_mac.run(quick=quick)
+    lines += mac_lines
     img_lines, img_records = bench_imgproc.run(
         n_images=4 if quick else 8, size=64 if quick else 128,
         mega_images=1 if quick else 4,
@@ -99,6 +104,7 @@ def main() -> None:
     _dump("BENCH_kernels.json", kern_records)
     _dump("BENCH_imgproc.json", img_records)
     _dump("BENCH_table1.json", t1_records + par_records)
+    _dump("BENCH_mac.json", pmul_records + mac_records)
     print("\n== CSV (name,us_per_call,derived) ==")
     for ln in lines:
         print(ln)

@@ -21,6 +21,14 @@ Four pillars:
    ``exact_error_metrics(spec)`` — closed-form MED/MRED/NMED/ER/WCE
    from the delta table composed with the exact high-sum PMF; the
    ground truth the Monte-Carlo simulator only estimates.
+6. **Approximate multipliers & MAC** (:mod:`repro.ax.mul`): the same
+   stack one level up the datapath — ``@register_multiplier`` kinds
+   (accurate/truncated/broken_array/mitchell), :class:`MulSpec` knobs,
+   compiled product/delta tables, exact multiplier analytics
+   (``exact_mul_error_metrics``), and :class:`MacSpec` bundling an
+   adder with a multiplier so ``make_engine(mac)`` (or
+   ``make_engine(..., mul=...)``) yields a full MAC engine with
+   ``.mul``, ``.mul_signed``, ``.conv2d`` and a MAC ``.matmul``.
 
 Only the registry is imported eagerly (it must be importable while
 ``repro.core.adders`` registers the builtin family); the engine and
@@ -63,20 +71,48 @@ _LAZY = {
     "exact_error_metrics": "repro.ax.analytics",
     "exact_error_metrics_sweep": "repro.ax.analytics",
     "exact_error_moments": "repro.ax.analytics",
+    "MAX_MUL_BITS": "repro.ax.mul",
+    "MAX_MUL_LUT_BITS": "repro.ax.mul",
+    "MacSpec": "repro.ax.mul",
+    "MulImpl": "repro.ax.mul",
+    "MulSpec": "repro.ax.mul",
+    "approx_mul": "repro.ax.mul",
+    "compile_mul_lut": "repro.ax.mul",
+    "default_mul_spec": "repro.ax.mul",
+    "get_multiplier": "repro.ax.mul",
+    "mul_lut_supported": "repro.ax.mul",
+    "register_multiplier": "repro.ax.mul",
+    "registered_multipliers": "repro.ax.mul",
+    "signed_mul_table": "repro.ax.mul",
+    "tap_tables": "repro.ax.mul",
+    "unregister_multiplier": "repro.ax.mul",
+    "MAX_MUL_COMPOSE_BITS": "repro.ax.analytics",
+    "mul_analytics_supported": "repro.ax.analytics",
+    "mul_design_space": "repro.ax.analytics",
+    "exact_mul_error_metrics": "repro.ax.analytics",
+    "exact_mul_error_metrics_sweep": "repro.ax.analytics",
 }
 
 __all__ = [
     "AUTO_STRATEGY", "AdderImpl", "AxEngine", "Backend", "ErrorMoments",
     "FilterStage",
     "MAX_COMPOSE_BITS", "MAX_LUT_LSM_BITS",
-    "STRATEGIES", "analytics_supported", "available_backends",
-    "compile_lut", "const_kinds",
-    "default_backend_name", "design_space", "error_delta_table",
+    "MAX_MUL_BITS", "MAX_MUL_COMPOSE_BITS", "MAX_MUL_LUT_BITS",
+    "MacSpec", "MulImpl", "MulSpec",
+    "STRATEGIES", "analytics_supported", "approx_mul",
+    "available_backends",
+    "compile_lut", "compile_mul_lut", "const_kinds",
+    "default_backend_name", "default_mul_spec", "design_space",
+    "error_delta_table",
     "exact_error_metrics", "exact_error_metrics_sweep",
-    "exact_error_moments", "get_adder",
-    "get_backend", "lut_supported", "make_engine", "register_adder",
-    "register_backend", "registered_kinds", "table1_kinds",
-    "unregister_adder",
+    "exact_error_moments", "exact_mul_error_metrics",
+    "exact_mul_error_metrics_sweep", "get_adder",
+    "get_backend", "get_multiplier", "lut_supported", "make_engine",
+    "mul_analytics_supported", "mul_design_space", "mul_lut_supported",
+    "register_adder",
+    "register_backend", "register_multiplier", "registered_kinds",
+    "registered_multipliers", "signed_mul_table", "table1_kinds",
+    "tap_tables", "unregister_adder", "unregister_multiplier",
 ]
 
 

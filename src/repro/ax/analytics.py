@@ -473,3 +473,245 @@ def design_space(
                     out.append(AdderSpec(kind=kind, n_bits=n, lsm_bits=m,
                                          const_bits=k))
     return tuple(out)
+
+
+# ===================================================== multipliers ====
+#
+# A multiplier's error delta is NOT a pure function of operand low bits
+# in general (the broken-array vertical break and Mitchell's
+# interpolation touch every bit), so the adder's low-part factorization
+# does not transfer wholesale.  Two exact methods instead:
+#
+# * ``method="compose"`` (N <= MAX_MUL_COMPOSE_BITS): reduce the full
+#   4^N delta table (repro.ax.mul.lut) through the SAME canonical
+#   population reduction as brute-force enumeration
+#   (repro.core.metrics.mul_population_report) — bit-identical to
+#   ``exhaustive_mul_error_metrics`` by construction.
+#
+# * ``method="closed"``: for the *low-delta* kinds (truncated always;
+#   broken_array when row_bits == 0) the delta IS a pure function of
+#   ``(a mod 2^t, b mod 2^t)`` with ``t = trunc_bits``, and — unlike
+#   the adder, whose exact reference a+b couples low and high parts
+#   additively — the product reference FACTORIZES:
+#
+#       MRED = 4^-N * sum_{al,bl} |d(al,bl)| * R(al) * R(bl)
+#       R(l) = sum_{h: h*q+l != 0} 1/(h*q+l)
+#            = (psi(M + l/q) - psi(l/q)) / q      for l >= 1
+#            = H_{M-1} / q                        for l == 0
+#
+#   with q = 2^t, M = 2^{N-t} high values per operand.  The l = 0 row
+#   excludes h = 0 — exactly the zero-operand pairs MRED skips (they
+#   carry no error mass for these kinds anyway: d(0, .) = d(., 0) = 0).
+#   MED/ER/WCE are exact integers from the 4^t low table times the
+#   4^{N-t} high multiplicity.  This is what prices wide truncated
+#   multipliers (N up to 15) without any 4^N pass.
+
+
+#: ``method="auto"`` composes the full delta table up to this operand
+#: width (a 4^12 = 16M-entry pass) and uses the factorized closed form
+#: above it.
+MAX_MUL_COMPOSE_BITS = 12
+
+
+def _mul_entry(kind: str):
+    from repro.ax.mul.registry import get_multiplier
+    return get_multiplier(kind)
+
+
+def _mul_closed_bits(spec) -> Optional[int]:
+    """The low-delta width ``t`` when the closed form applies, else
+    None.  ``t = 0`` means the spec is errorless."""
+    entry = _mul_entry(spec.kind)
+    if entry.is_exact:
+        return 0
+    if entry.low_delta and spec.effective_row_bits == 0:
+        return spec.effective_trunc_bits
+    return None
+
+
+def mul_analytics_supported(spec) -> bool:
+    """Whether exact analytics exist for ``spec`` (any kind up to the
+    compose width; low-delta kinds at any supported width)."""
+    if spec.n_bits <= MAX_MUL_COMPOSE_BITS:
+        return True
+    t = _mul_closed_bits(spec)
+    return t is not None and t <= MAX_MUL_COMPOSE_BITS
+
+
+def _zero_mul_report(spec):
+    from repro.core.metrics import MulErrorReport
+    return MulErrorReport(spec=spec, n_samples=4 ** spec.n_bits, med=0.0,
+                          mred=0.0, nmed=0.0, error_rate=0.0, wce=0,
+                          exact=True)
+
+
+def _mul_low_abs_table(spec, t: int) -> np.ndarray:
+    """``|d(al, bl)|`` over the 2^t x 2^t low-operand grid (int64,
+    row-major in ``al``) — the impls evaluated directly on the low
+    values (valid because the delta only depends on them)."""
+    vals = np.arange(1 << t, dtype=np.uint64)
+    a = np.repeat(vals, 1 << t)
+    b = np.tile(vals, 1 << t)
+    approx = _mul_entry(spec.kind).impl(a, b, spec).astype(np.int64)
+    return np.abs(approx - (a * b).astype(np.int64))
+
+
+@functools.lru_cache(maxsize=None)
+def _mul_reciprocals(n_bits: int, t: int) -> np.ndarray:
+    """``R(l) = sum_{h=0}^{M-1} 1/(h*2^t + l)`` for each low residue
+    ``l``, the h = 0 term dropped at l = 0 (digamma closed form;
+    float64, read-only, cached per (N, t))."""
+    from scipy.special import digamma
+    q = float(1 << t)
+    big = float(1 << (n_bits - t))
+    l = np.arange(1, 1 << t, dtype=np.float64)
+    r = (digamma(big + l / q) - digamma(l / q)) / q
+    # l = 0: H_{M-1}/q (harmonic form; M = 1 degrades to 0).
+    r0 = (digamma(big) + np.euler_gamma) / q
+    r = np.concatenate([[r0], r])
+    r.flags.writeable = False
+    return r
+
+
+def _mul_compose_report(spec, cache_tables: bool):
+    from repro.ax.mul.lut import (mul_error_delta_table,
+                                  mul_error_delta_table_nocache)
+    from repro.core.metrics import mul_population_report
+    table = (mul_error_delta_table(spec) if cache_tables
+             else mul_error_delta_table_nocache(spec))
+    ed = np.abs(table.astype(np.int64))
+    n = spec.n_bits
+    vals = np.arange(1 << n, dtype=np.int64)
+    s = np.repeat(vals, 1 << n) * np.tile(vals, 1 << n)
+    return mul_population_report(spec, ed, s)
+
+
+def _mul_closed_report(spec, t: int):
+    from repro.core.metrics import MulErrorReport
+    n = spec.n_bits
+    low = _mul_low_abs_table(spec, t).reshape(1 << t, 1 << t)
+    mult = 4 ** (n - t)
+    pop = 4 ** n
+    med = float(int(low.sum()) * mult) / float(pop)
+    r = _mul_reciprocals(n, t)
+    terms = low * r[:, None] * r[None, :]
+    mred = math.fsum(terms[low != 0].tolist()) / float(pop)
+    return MulErrorReport(
+        spec=spec,
+        n_samples=pop,
+        med=med,
+        mred=mred,
+        nmed=med / float(((1 << n) - 1) ** 2),
+        error_rate=float(int((low != 0).sum()) * mult) / float(pop),
+        wce=int(low.max(initial=0)),
+        exact=True,
+    )
+
+
+def _resolve_mul_method(method: str, spec) -> str:
+    if method not in _METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of "
+                         f"{_METHODS}")
+    if method == "auto":
+        method = ("compose" if spec.n_bits <= MAX_MUL_COMPOSE_BITS
+                  else "closed")
+    if method == "compose" and spec.n_bits > MAX_MUL_COMPOSE_BITS:
+        raise ValueError(
+            f"method='compose' needs n_bits <= {MAX_MUL_COMPOSE_BITS} "
+            f"(4^N delta-table pass); use 'closed'")
+    if method == "closed":
+        t = _mul_closed_bits(spec)
+        if t is None:
+            raise ValueError(
+                f"no closed form for {spec.short_name}: the delta is "
+                f"not a pure function of operand low bits (only the "
+                f"low-delta kinds factorize); use 'compose'")
+        if t > MAX_MUL_COMPOSE_BITS:
+            raise ValueError(
+                f"closed form needs trunc_bits <= {MAX_MUL_COMPOSE_BITS} "
+                f"(4^t low-table pass), got {t}")
+    return method
+
+
+def exact_mul_error_metrics(spec, method: str = "auto",
+                            cache_tables: bool = True):
+    """Exact MED/MRED/NMED/ER/WCE for one multiplier spec.
+
+    ``method="compose"`` is bit-identical to
+    :func:`repro.core.metrics.exhaustive_mul_error_metrics` (shared
+    canonical reduction); ``method="closed"`` agrees with it to float64
+    rounding of the digamma evaluations (~1e-14 relative) and scales to
+    widths where enumeration is infeasible.
+    """
+    if _mul_entry(spec.kind).is_exact:
+        return _zero_mul_report(spec)
+    method = _resolve_mul_method(method, spec)
+    if method == "compose":
+        return _mul_compose_report(spec, cache_tables)
+    t = _mul_closed_bits(spec)
+    if t == 0:
+        return _zero_mul_report(spec)
+    return _mul_closed_report(spec, t)
+
+
+def exact_mul_error_metrics_sweep(specs, method: str = "auto",
+                                  cache_tables: bool = True):
+    """Exact reports for many multiplier specs, memoized per canonical
+    table identity within the call (mirrors
+    :func:`exact_error_metrics_sweep`)."""
+    from repro.ax.mul.lut import _canonical
+    memo: Dict[object, object] = {}
+    out = []
+    for spec in specs:
+        key = (_canonical(spec), method)
+        if key not in memo:
+            memo[key] = exact_mul_error_metrics(
+                spec, method=method, cache_tables=cache_tables)
+        rep = memo[key]
+        if rep.spec is not spec:
+            rep = dataclasses.replace(rep, spec=spec)
+        out.append(rep)
+    return out
+
+
+def mul_design_space(
+    n_bits: Sequence[int] = (8,),
+    kinds: Optional[Sequence[str]] = None,
+    include_exact: bool = True,
+) -> tuple:
+    """Every analytics-supported multiplier configuration: registered
+    kinds x widths x valid (trunc, rows) knob settings, duplicates
+    pruned (a broken array with ``trunc <= rows`` is the same hardware
+    as ``trunc = 0``)."""
+    from repro.ax.mul.registry import get_multiplier, registered_multipliers
+    from repro.ax.mul.specs import MulSpec
+    if kinds is None:
+        kinds = registered_multipliers()
+    out = []
+    for n in n_bits:
+        for kind in kinds:
+            entry = get_multiplier(kind)
+            if entry.is_exact:
+                if include_exact:
+                    out.append(MulSpec(kind=kind, n_bits=n))
+                continue
+            if entry.uses_rows:
+                for v in range(n + 1):
+                    for t in range(n + 1):
+                        if (t and t <= v) or (t == 0 and v == 0):
+                            continue
+                        spec = MulSpec(kind=kind, n_bits=n, trunc_bits=t,
+                                       row_bits=v)
+                        if mul_analytics_supported(spec):
+                            out.append(spec)
+            elif entry.uses_trunc:
+                lo = 0 if entry.trunc_margin else 1
+                for t in range(lo, n + 1 - entry.trunc_margin):
+                    spec = MulSpec(kind=kind, n_bits=n, trunc_bits=t)
+                    if mul_analytics_supported(spec):
+                        out.append(spec)
+            else:
+                spec = MulSpec(kind=kind, n_bits=n)
+                if mul_analytics_supported(spec):
+                    out.append(spec)
+    return tuple(out)

@@ -43,6 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ax import lut as lut_lib
+from repro.ax.mul import lut as mul_lut_lib
+from repro.ax.mul.impls import approx_mul
+from repro.ax.mul.registry import get_multiplier
+from repro.ax.mul.specs import MulSpec
 from repro.ax.registry import get_adder
 from repro.core.adders import approx_add, approx_add_mod
 from repro.core.specs import AdderSpec
@@ -102,6 +106,13 @@ def _use_lut(spec: AdderSpec, strategy: str) -> bool:
     kinds have no approximate section — the plain add is the fast path)."""
     return _require_concrete(strategy) == "lut" \
         and not get_adder(spec.kind).is_exact
+
+
+def _use_mul_lut(mul_spec: MulSpec, strategy: str) -> bool:
+    """Multiplier-side twin of :func:`_use_lut`: the accurate kind's
+    native multiply beats any gather."""
+    return _require_concrete(strategy) == "lut" \
+        and not get_multiplier(mul_spec.kind).is_exact
 
 
 class FilterStage(NamedTuple):
@@ -187,10 +198,40 @@ class Backend:
             q = s
         return q
 
+    def mul(self, a, b, mul_spec: MulSpec, *, strategy: str = "reference"):
+        """Elementwise approximate multiply on unsigned N-bit container
+        patterns; returns the FULL (2N-bit) product in the container —
+        a multiplier's output bus carries every bit, unlike the adder's
+        mod-2^N sum."""
+        raise NotImplementedError
+
+    def conv2d(self, q, spec: AdderSpec, mul_spec: MulSpec, kernel, *,
+               shift: int = 0, strategy: str = "reference"):
+        """2D MAC convolution on SIGNED values: per-tap products through
+        the approximate multiplier (sign-magnitude, static integer
+        kernel weights), tap accumulation through the approximate adder
+        mod 2^N, sign extension, then an exact rounding right-``shift``.
+
+        ``q`` holds signed values with ``|q| < 2^mul_spec.n_bits``
+        (they index the per-tap product tables); ``kernel`` is a static
+        tuple-of-tuples of integer weights with odd dimensions,
+        replicate-edge padded.  Row-major tap order — every backend
+        folds the taps in the same sequence, which is what makes the
+        datapaths bit-identical."""
+        raise NotImplementedError
+
     def matmul(self, a, b, spec: AdderSpec, *, block=(128, 128, 128),
-               strategy: str = "reference"):
-        """int8 (M,K) @ int8 (K,N) -> int32 with exact per-K-tile dots and
-        approximate inter-tile accumulation."""
+               strategy: str = "reference",
+               mul_spec: "MulSpec | None" = None):
+        """int8 (M,K) @ int8 (K,N) -> int32.
+
+        With ``mul_spec=None`` (or an exact kind): exact per-K-tile dots
+        (the MXU path) and approximate inter-tile accumulation.  With an
+        approximate ``mul_spec``: every product runs through the
+        approximate multiplier (sign-magnitude), the K tile accumulates
+        exactly (int32 wraparound is associative, so in-tile order is
+        immaterial), and the inter-tile accumulator stays approximate —
+        the full MAC datapath."""
         raise NotImplementedError
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec: AdderSpec,
@@ -233,6 +274,39 @@ def edge_taps(xp, q, axis: int, offsets):
         s[axis] = slice(o + left, o + left + n)
         views.append(p[tuple(s)])
     return views
+
+
+def conv_taps(xp, q, kh: int, kw: int):
+    """Replicate-padded shifted views for a (kh, kw) 2D kernel over the
+    trailing (H, W) dims, row-major tap order: view (dy, dx) at output
+    (y, x) reads ``q[y + dy - kh//2, x + dx - kw//2]`` (edges
+    replicated).  THE 2D tap builder — the backend conv datapaths and
+    the Pallas MAC kernel body all consume it, like :func:`edge_taps`
+    for the separable chains."""
+    cy, cx = kh // 2, kw // 2
+    pad = [(0, 0)] * (q.ndim - 2) + [(cy, kh - 1 - cy),
+                                     (cx, kw - 1 - cx)]
+    p = xp.pad(q, pad, mode="edge")
+    h, w = q.shape[-2], q.shape[-1]
+    views = []
+    for dy in range(kh):
+        for dx in range(kw):
+            views.append(p[..., dy:dy + h, dx:dx + w])
+    return views
+
+
+def check_conv_kernel(kernel) -> Tuple[int, int, Tuple[int, ...]]:
+    """Validate a static conv kernel: rectangular tuple-of-tuples of
+    ints, odd dims.  Returns (kh, kw, row-major flat weights)."""
+    kh = len(kernel)
+    if kh == 0 or kh % 2 == 0:
+        raise ValueError(f"kernel height must be odd and nonzero, got {kh}")
+    kw = len(kernel[0])
+    if kw == 0 or kw % 2 == 0:
+        raise ValueError(f"kernel width must be odd and nonzero, got {kw}")
+    if any(len(row) != kw for row in kernel):
+        raise ValueError("kernel rows must have equal length")
+    return kh, kw, tuple(int(w) for row in kernel for w in row)
 
 
 class NumpyBackend(Backend):
@@ -278,16 +352,90 @@ class NumpyBackend(Backend):
             return lut_lib.lut_add_full(a, b, spec)
         return approx_add(a, b, spec, fast=_fast(strategy))
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+    def mul(self, a, b, mul_spec, *, strategy="reference"):
+        a, b = np.asarray(a), np.asarray(b)
+        if _use_mul_lut(mul_spec, strategy):
+            return mul_lut_lib.lut_mul(a, b, mul_spec)
+        return approx_mul(a, b, mul_spec, fast=_fast(strategy))
+
+    def conv2d(self, q, spec, mul_spec, kernel, *, shift=0,
                strategy="reference"):
+        _require_concrete(strategy)
+        q = np.asarray(q)
+        kh, kw, weights = check_conv_kernel(kernel)
+        tables = mul_lut_lib.tap_tables(mul_spec, weights)
+        v = q.astype(np.int64)
+        if v.size and int(np.abs(v).max()) >= tables.shape[1]:
+            raise ValueError(
+                f"conv2d inputs must satisfy |q| < 2^{mul_spec.n_bits} "
+                f"(the multiplier operand width); got "
+                f"{int(np.abs(v).max())}")
+        mask = np.int64((1 << spec.n_bits) - 1)
+        signb = np.int64(1 << (spec.n_bits - 1))
+        acc = None
+        for i, view in enumerate(conv_taps(np, v, kh, kw)):
+            p = np.take(tables[i], np.abs(view)).astype(np.int64)
+            p = np.where(view < 0, -p, p)
+            u = p & mask
+            acc = u if acc is None else self.add(acc, u, spec,
+                                                 strategy=strategy)
+        s = (acc ^ signb) - signb
+        if shift:
+            s = (s + (1 << (shift - 1))) >> shift
+        return s
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference", mul_spec=None):
         from repro.kernels.ref import ref_approx_matmul
         if _use_lut(spec, strategy):
             raise NotImplementedError(
                 "the lut strategy is not implemented for the host matmul "
                 "oracle; use the jax backend (all strategies) or "
                 "strategy='fused'")
+        if mul_spec is not None and not mul_spec.is_exact:
+            return self._mac_matmul(np.asarray(a), np.asarray(b), spec,
+                                    mul_spec, block[2], strategy)
         return ref_approx_matmul(np.asarray(a), np.asarray(b), spec,
                                  bk=block[2], fast=_fast(strategy))
+
+    def _mac_matmul(self, a, b, spec, mul_spec, bk, strategy):
+        """Host MAC oracle: per-element signed-table products, exact
+        in-tile sums on int32 wraparound semantics, approximate
+        inter-tile folds — the unrolled reference the jax/Pallas MAC
+        kernels are tested against.  Output convention matches
+        ``ref_approx_matmul``: a single K tile comes back as the raw
+        int32 partial; otherwise the last fold's container (masked to
+        N bits, so sign-extended int32 only when N = 32)."""
+        a64, b64 = a.astype(np.int64), b.astype(np.int64)
+        m, k = a64.shape
+        n = b64.shape[1]
+        table = mul_lut_lib.signed_mul_table(mul_spec)
+        w = mul_spec.n_bits
+        maskw = np.int64((1 << w) - 1)
+
+        def lanes(x):
+            # int32 lane pattern -> uint64 container holding the 32-bit
+            # pattern, exactly what the jax fold's bitcast produces.
+            return (x.astype(np.int64)
+                    & np.int64(0xFFFFFFFF)).astype(np.uint64)
+
+        acc = None
+        for t0 in range(0, k, bk):
+            part = np.zeros((m, n), dtype=np.int64)
+            for kk in range(t0, min(t0 + bk, k)):
+                idx = (((a64[:, kk:kk + 1] & maskw) << w)
+                       | (b64[kk:kk + 1, :] & maskw))
+                part = part + table[idx]
+            p32 = (part & np.int64(0xFFFFFFFF)) \
+                .astype(np.uint32).astype(np.int32)
+            if acc is None:
+                acc = p32
+            else:
+                s = self.add(lanes(acc), lanes(p32), spec,
+                             strategy=strategy)
+                acc = (s & np.uint64(0xFFFFFFFF)) \
+                    .astype(np.uint32).astype(np.int32)
+        return acc
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im, spec, *,
                   inverse=False):
@@ -338,6 +486,97 @@ def _add_mod_u32(a, b, spec: AdderSpec, strategy: str):
     if _use_lut(spec, strategy):
         return lut_add_mod_u32(a, b, spec)
     return approx_add_mod(a, b, spec, fast=_fast(strategy))
+
+
+def mul_lut_gather_u32(a, b, table, mul_spec: MulSpec):
+    """THE LUT multiply on uint32 lanes: one full-product table gather.
+    ``table`` is a jit constant here and a VMEM ref block inside the
+    Pallas kernel (``repro.kernels.mac``); both consume this formula."""
+    n = mul_spec.n_bits
+    mask = jnp.uint32((1 << n) - 1)
+    idx = ((a & mask) << n) | (b & mask)
+    return jnp.take(table, idx).astype(jnp.uint32)
+
+
+def _mul_u32(a, b, mul_spec: MulSpec, strategy: str):
+    """Multiplier strategy dispatch on uint32 container lanes."""
+    if _use_mul_lut(mul_spec, strategy):
+        return mul_lut_gather_u32(
+            a, b, jnp.asarray(mul_lut_lib.compile_mul_lut(mul_spec)),
+            mul_spec)
+    return approx_mul(a, b, mul_spec, fast=_fast(strategy))
+
+
+@functools.partial(jax.jit, static_argnames=("mul_spec", "strategy"))
+def _jax_mul(a, b, mul_spec: MulSpec, strategy: str):
+    p = _mul_u32(_as_u32(a), _as_u32(b), mul_spec, strategy)
+    return _like(p, a.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mul_spec", "kernel", "shift",
+                                    "strategy"))
+def _jax_conv2d(q, spec: AdderSpec, mul_spec: MulSpec, kernel,
+                shift: int, strategy: str):
+    """Jitted 2D MAC convolution: the same per-tap product tables and
+    the same row-major fold order as the host and Pallas datapaths."""
+    kh, kw, weights = check_conv_kernel(kernel)
+    tables = jnp.asarray(mul_lut_lib.tap_tables(mul_spec, weights))
+    v = q.astype(jnp.int32)
+    mask = jnp.uint32((1 << spec.n_bits) - 1)
+    sign = jnp.uint32(1 << (spec.n_bits - 1))
+    acc = None
+    for i, view in enumerate(conv_taps(jnp, v, kh, kw)):
+        p = jnp.take(tables[i], jnp.abs(view))
+        p = jnp.where(view < 0, -p, p)
+        u = jax.lax.bitcast_convert_type(p, jnp.uint32) & mask
+        acc = u if acc is None else _add_mod_u32(acc, u, spec, strategy)
+    s = jax.lax.bitcast_convert_type((acc ^ sign) - sign, jnp.int32)
+    if shift:
+        s = (s + (1 << (shift - 1))) >> shift
+    return s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mul_spec", "block", "strategy"))
+def _jax_mac_matmul(a, b, spec: AdderSpec, mul_spec: MulSpec, block,
+                    strategy: str):
+    """K-tiled MAC GEMM: signed-table products, exact int32 in-tile
+    accumulation (wraparound is associative mod 2^32, so the in-tile
+    order cannot affect the container result), approximate inter-tile
+    folds — bit-identical to the host oracle and the Pallas kernel.
+    Ragged K is zero-padded: zero operands hit table entry 0 (= 0), so
+    the padded tile's partial is unchanged."""
+    bk = block[2]
+    k = a.shape[1]
+    a32, b32 = a.astype(jnp.int32), b.astype(jnp.int32)
+    n_tiles = -(-k // bk)
+    if n_tiles * bk != k:
+        pad = n_tiles * bk - k
+        a32 = jnp.pad(a32, ((0, 0), (0, pad)))
+        b32 = jnp.pad(b32, ((0, pad), (0, 0)))
+    table = jnp.asarray(mul_lut_lib.signed_mul_table(mul_spec))
+    w = mul_spec.n_bits
+    maskw = jnp.int32((1 << w) - 1)
+    m, n = a32.shape[0], b32.shape[1]
+
+    def tile_part(i):
+        def body(j, acc):
+            col = jax.lax.dynamic_slice_in_dim(a32, i * bk + j, 1, axis=1)
+            row = jax.lax.dynamic_slice_in_dim(b32, i * bk + j, 1, axis=0)
+            idx = ((col & maskw) << w) | (row & maskw)
+            return acc + jnp.take(table, idx)
+
+        return jax.lax.fori_loop(0, bk, body,
+                                 jnp.zeros((m, n), jnp.int32))
+
+    def outer(i, acc):
+        return _jax_add(acc, tile_part(i), spec, strategy)
+
+    acc = tile_part(0)
+    if n_tiles > 1:
+        acc = jax.lax.fori_loop(1, n_tiles, outer, acc)
+    return acc
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "strategy"))
@@ -432,8 +671,20 @@ class JaxBackend(Backend):
                                _norm_weights(weights, terms.shape[0]),
                                strategy)
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+    def mul(self, a, b, mul_spec, *, strategy="reference"):
+        return _jax_mul(jnp.asarray(a), jnp.asarray(b), mul_spec, strategy)
+
+    def conv2d(self, q, spec, mul_spec, kernel, *, shift=0,
                strategy="reference"):
+        kernel = tuple(tuple(int(w) for w in row) for row in kernel)
+        return _jax_conv2d(jnp.asarray(q), spec, mul_spec, kernel,
+                           shift, strategy)
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference", mul_spec=None):
+        if mul_spec is not None and not mul_spec.is_exact:
+            return _jax_mac_matmul(jnp.asarray(a), jnp.asarray(b), spec,
+                                   mul_spec, tuple(block), strategy)
         return _jax_matmul(jnp.asarray(a), jnp.asarray(b), spec,
                            tuple(block), strategy)
 
@@ -520,6 +771,40 @@ def _pallas_matmul(a, b, spec: AdderSpec, block, interpret: bool,
     return out[:m0, :n0]
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("mul_spec", "interpret", "strategy"))
+def _pallas_elementwise_mul(a, b, mul_spec: MulSpec, interpret: bool,
+                            strategy: str):
+    """Tile plumbing for the elementwise multiplier kernel — identical
+    flatten/pad/slice scheme to :func:`_pallas_elementwise_add`."""
+    from repro.kernels.mac import mul_elementwise_pallas
+    shape = a.shape
+    size = int(np.prod(shape)) if shape else 1
+    ap = _as_tiles(a.reshape(-1), size)
+    bp = _as_tiles(b.reshape(-1), size)
+    out = mul_elementwise_pallas(ap, bp, mul_spec, interpret=interpret,
+                                 strategy=strategy)
+    return out.reshape(-1)[:size].reshape(shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mul_spec", "block",
+                                    "interpret", "fast"))
+def _pallas_mac_matmul(a, b, spec: AdderSpec, mul_spec: MulSpec, block,
+                       interpret: bool, fast: bool):
+    """Pad/slice plumbing for the MAC GEMM kernel.  Zero padding is
+    harmless in every dimension: padded operands gather table entry 0
+    (= 0) so in-tile partials are unchanged, and padded M/N lanes are
+    sliced away."""
+    from repro.kernels.mac import mac_matmul_pallas
+    bm, bn, bk = block
+    ap, m0, _ = _pad2(a.astype(jnp.int32), bm, bk)
+    bp, _, n0 = _pad2(b.astype(jnp.int32), bk, bn)
+    out = mac_matmul_pallas(ap, bp, spec, mul_spec, block=block,
+                            interpret=interpret, fast=fast)
+    return out[:m0, :n0]
+
+
 class PallasBackend(Backend):
     """Pallas kernels in interpret mode — validates the fused TPU kernel
     bodies on any host."""
@@ -555,9 +840,34 @@ class PallasBackend(Backend):
                                    interpret=self.interpret,
                                    fast=_fast(strategy))
 
-    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+    def mul(self, a, b, mul_spec, *, strategy="reference"):
+        if _use_mul_lut(mul_spec, strategy) \
+                and not mul_lut_lib.mul_lut_supported(mul_spec):
+            raise NotImplementedError(
+                f"no compilable product table for {mul_spec.short_name} "
+                f"(n_bits > {mul_lut_lib.MAX_MUL_LUT_BITS}); use "
+                f"strategy='fused'")
+        return _pallas_elementwise_mul(jnp.asarray(a), jnp.asarray(b),
+                                       mul_spec, self.interpret,
+                                       _require_concrete(strategy))
+
+    def conv2d(self, q, spec, mul_spec, kernel, *, shift=0,
                strategy="reference"):
+        from repro.kernels.mac import conv2d_mac_pallas
+        self._kernel_strategy(spec, strategy, "conv2d")
+        kernel = tuple(tuple(int(w) for w in row) for row in kernel)
+        check_conv_kernel(kernel)
+        return conv2d_mac_pallas(jnp.asarray(q), spec, mul_spec, kernel,
+                                 shift=shift, interpret=self.interpret,
+                                 fast=_fast(strategy))
+
+    def matmul(self, a, b, spec, *, block=(128, 128, 128),
+               strategy="reference", mul_spec=None):
         self._kernel_strategy(spec, strategy, "matmul")
+        if mul_spec is not None and not mul_spec.is_exact:
+            return _pallas_mac_matmul(jnp.asarray(a), jnp.asarray(b),
+                                      spec, mul_spec, tuple(block),
+                                      self.interpret, _fast(strategy))
         return _pallas_matmul(jnp.asarray(a), jnp.asarray(b), spec,
                               tuple(block), self.interpret,
                               _fast(strategy))

@@ -28,6 +28,14 @@ import numpy as np
 from repro.ax.backends import Backend, check_strategy, get_backend, \
     resolve_strategy
 from repro.ax.lut import lut_supported
+from repro.ax.mul import (
+    MAX_MUL_LUT_BITS,
+    MacSpec,
+    MulSpec,
+    default_mul_spec,
+    get_multiplier,
+    mul_lut_supported,
+)
 from repro.ax.registry import get_adder
 from repro.core.specs import AdderSpec
 from repro.numerics.fixed_point import (
@@ -53,12 +61,18 @@ class AxEngine:
         ``"reference"`` (the registered oracle), ``"fused"`` (the
         algebraically-fused variant where registered), or ``"lut"`` (the
         compiled low-part table).  All bit-identical.
+      mul_spec: the approximate multiplier, or ``None`` for an
+        adder-only engine.  With a multiplier the engine is a MAC
+        engine: ``mul``/``mul_signed`` run the multiplier alone, and
+        ``conv2d``/``matmul`` route every product through it (with the
+        adder on the accumulations).
     """
 
     spec: AdderSpec
     fmt: Optional[FixedPointFormat]
     backend: Backend
     strategy: str = "reference"
+    mul_spec: Optional[MulSpec] = None
 
     @property
     def fast(self) -> bool:
@@ -94,6 +108,37 @@ class AxEngine:
         self._require_fmt("filter_chain")
         return self.backend.filter_chain(q, self.spec, tuple(stages),
                                          strategy=self.strategy)
+
+    # --------------------------------------------------------- multipliers
+
+    def mul(self, a, b):
+        """Elementwise approximate multiply on unsigned N-bit container
+        operands (N = ``mul_spec.n_bits``); returns the full approximate
+        product (up to 2N+1 bits for logarithmic kinds)."""
+        ms = self._require_mul("mul")
+        return self.backend.mul(a, b, ms, strategy=self.strategy)
+
+    def mul_signed(self, qa, qb):
+        """Sign-magnitude signed multiply on signed integer arrays with
+        ``|q| <= 2^(N-1)``: ``sign(qa)*sign(qb)*approx(|qa|, |qb|)`` —
+        the product convention of the MAC datapaths."""
+        ms = self._require_mul("mul_signed")
+        xp = np if isinstance(qa, np.ndarray) else jnp
+        p = self.backend.mul(xp.abs(qa), xp.abs(qb), ms,
+                             strategy=self.strategy)
+        return xp.where((qa < 0) != (qb < 0), -p, p)
+
+    def conv2d(self, q, kernel, shift: int = 0):
+        """2D MAC convolution on signed containers: every tap product
+        runs the approximate multiplier, the tap sums run the
+        approximate adder (row-major fold, replicate-edge padding), and
+        ``shift`` applies an exact rounding right-shift (the kernel's
+        normalization).  ``kernel`` is a tuple-of-tuples of static
+        integer weights with odd dimensions."""
+        self._require_fmt("conv2d")
+        ms = self._require_mul("conv2d")
+        return self.backend.conv2d(q, self.spec, ms, kernel,
+                                   shift=shift, strategy=self.strategy)
 
     # --------------------------------------------------------- fixed point
 
@@ -155,9 +200,12 @@ class AxEngine:
     # ----------------------------------------------------------- compound
 
     def matmul(self, a, b, block=(128, 128, 128)):
-        """int8 GEMM with approximate inter-K-tile accumulation."""
+        """int8 GEMM with approximate inter-K-tile accumulation.  On a
+        MAC engine (``mul_spec`` set) every product additionally runs
+        the approximate multiplier."""
         return self.backend.matmul(a, b, self.spec, block=block,
-                                   strategy=self.strategy)
+                                   strategy=self.strategy,
+                                   mul_spec=self.mul_spec)
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im,
                   inverse: bool = False):
@@ -169,9 +217,13 @@ class AxEngine:
 
     def replace(self, **kw) -> "AxEngine":
         """A new engine with some fields swapped (``backend`` may be a
-        name string; ``fast`` maps onto ``strategy``)."""
+        name string; ``fast`` maps onto ``strategy``; ``mul`` accepts a
+        :class:`MulSpec`, a kind name, or ``None`` like
+        :func:`make_engine`)."""
         if "backend" in kw:
             kw["backend"] = get_backend(kw["backend"])
+        if "mul" in kw:
+            kw["mul_spec"] = _normalize_mul(kw.pop("mul"))
         if "fast" in kw:
             kw["strategy"] = resolve_strategy(kw.get("strategy"),
                                               kw.pop("fast"))
@@ -188,6 +240,13 @@ class AxEngine:
                 f"AxEngine.{what} needs a fixed-point format; pass "
                 f"fmt=FixedPointFormat(...) to make_engine")
         return self.fmt
+
+    def _require_mul(self, what: str) -> MulSpec:
+        if self.mul_spec is None:
+            raise ValueError(
+                f"AxEngine.{what} needs a multiplier; pass mul=... (a "
+                f"MulSpec or kind name) or a MacSpec to make_engine")
+        return self.mul_spec
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -227,23 +286,44 @@ def _default_spec(kind: str, n_bits: int) -> AdderSpec:
                      const_bits=k if entry.const_section else 0)
 
 
+def _normalize_mul(mul: Union[MulSpec, str, None]) -> Optional[MulSpec]:
+    """``mul=`` coercion: a spec passes through, a kind name gets the
+    kind's default knobs at 8 operand bits (the image-processing width),
+    ``None`` means adder-only."""
+    if mul is None or isinstance(mul, MulSpec):
+        return mul
+    if isinstance(mul, str):
+        try:
+            get_multiplier(mul)
+        except KeyError:
+            raise ValueError(f"unknown multiplier kind {mul!r}") from None
+        return default_mul_spec(mul, n_bits=8)
+    raise TypeError(f"mul must be a MulSpec, kind name or None; "
+                    f"got {type(mul).__name__}")
+
+
 @functools.lru_cache(maxsize=None)
 def _make_engine_cached(spec: AdderSpec, fmt: Optional[FixedPointFormat],
-                        backend: Backend, strategy: str) -> AxEngine:
-    return AxEngine(spec=spec, fmt=fmt, backend=backend, strategy=strategy)
+                        backend: Backend, strategy: str,
+                        mul_spec: Optional[MulSpec]) -> AxEngine:
+    return AxEngine(spec=spec, fmt=fmt, backend=backend, strategy=strategy,
+                    mul_spec=mul_spec)
 
 
-def make_engine(spec: Union[AdderSpec, str],
+def make_engine(spec: Union[AdderSpec, MacSpec, str],
                 fmt: Optional[FixedPointFormat] = None,
                 backend: Union[str, Backend, None] = None,
                 fast: bool = False,
-                strategy: Optional[str] = None) -> AxEngine:
+                strategy: Optional[str] = None,
+                mul: Union[MulSpec, str, None] = None) -> AxEngine:
     """Build (or fetch the cached) execution engine.
 
     Args:
-      spec: an :class:`AdderSpec`, or a registered kind name — a bare name
-        gets the paper's (m, k) partition scaled to the format width
-        (N=32 when no ``fmt`` is given).
+      spec: an :class:`AdderSpec`, a :class:`MacSpec` (bundling adder
+        and multiplier; then ``mul`` must be left ``None``), or a
+        registered adder kind name — a bare name gets the paper's (m, k)
+        partition scaled to the format width (N=32 when no ``fmt`` is
+        given).
       fmt: fixed-point format for the signed/float entry points.  Must
         match ``spec.n_bits`` for non-exact adders.  ``None`` restricts
         the engine to the raw-container ops.
@@ -255,10 +335,20 @@ def make_engine(spec: Union[AdderSpec, str],
         fastest known one (fused on the jax/Pallas backends, lut on
         numpy where the spec has a compilable table).  ``None`` derives
         it from ``fast``.
+      mul: optional approximate multiplier — a :class:`MulSpec`, a
+        registered multiplier kind name (default knobs at 8 bits), or
+        ``None`` for an adder-only engine.  With a multiplier the
+        engine exposes ``mul``/``mul_signed``/``conv2d`` and its
+        ``matmul`` becomes a full approximate MAC.
     """
     strategy = resolve_strategy(strategy, fast)
+    if isinstance(spec, MacSpec):
+        if mul is not None:
+            raise ValueError("pass either a MacSpec or mul=..., not both")
+        spec, mul = spec.adder, spec.mul
     if isinstance(spec, str):
         spec = _default_spec(spec, fmt.n_bits if fmt is not None else 32)
+    mul_spec = _normalize_mul(mul)
     if (fmt is not None and not get_adder(spec.kind).is_exact
             and spec.n_bits != fmt.n_bits):
         raise ValueError(
@@ -268,7 +358,12 @@ def make_engine(spec: Union[AdderSpec, str],
         raise ValueError(
             f"no compilable LUT for {spec.short_name} (lsm_bits too "
             f"wide); use strategy='reference' or 'fused'")
+    if (strategy == "lut" and mul_spec is not None
+            and not mul_lut_supported(mul_spec)):
+        raise ValueError(
+            f"no compilable LUT for {mul_spec.short_name} (n_bits > "
+            f"{MAX_MUL_LUT_BITS}); use strategy='reference' or 'fused'")
     resolved = get_backend(backend)
     if strategy == "auto":
         strategy = resolved.preferred_strategy(spec)
-    return _make_engine_cached(spec, fmt, resolved, strategy)
+    return _make_engine_cached(spec, fmt, resolved, strategy, mul_spec)

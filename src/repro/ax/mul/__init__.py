@@ -1,0 +1,57 @@
+"""Approximate multiplier family: registry, specs, LUTs, and the MAC
+composition types.
+
+Mirrors the adder stack one level down: ``repro.ax.mul`` is to
+multipliers what ``repro.ax`` (registry/lut) is to adders.  See
+:mod:`repro.ax.mul.impls` for the builtin kinds and
+:mod:`repro.ax.analytics` for the exact error analytics over these
+specs.
+"""
+
+from repro.ax.mul.impls import approx_mul
+from repro.ax.mul.lut import (
+    MAX_MUL_LUT_BITS,
+    compile_mul_lut,
+    lut_mul,
+    mul_error_delta_table,
+    mul_error_delta_table_nocache,
+    mul_lut_index,
+    mul_lut_supported,
+    signed_mul_table,
+    tap_tables,
+)
+from repro.ax.mul.registry import (
+    MulImpl,
+    get_multiplier,
+    register_multiplier,
+    registered_multipliers,
+    unregister_multiplier,
+)
+from repro.ax.mul.specs import (
+    MAX_MUL_BITS,
+    MacSpec,
+    MulSpec,
+    default_mul_spec,
+)
+
+__all__ = [
+    "MAX_MUL_BITS",
+    "MAX_MUL_LUT_BITS",
+    "MacSpec",
+    "MulImpl",
+    "MulSpec",
+    "approx_mul",
+    "compile_mul_lut",
+    "default_mul_spec",
+    "get_multiplier",
+    "lut_mul",
+    "mul_error_delta_table",
+    "mul_error_delta_table_nocache",
+    "mul_lut_index",
+    "mul_lut_supported",
+    "register_multiplier",
+    "registered_multipliers",
+    "signed_mul_table",
+    "tap_tables",
+    "unregister_multiplier",
+]

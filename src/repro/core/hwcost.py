@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core import specs as S
 from repro.core.netlist import (
-    T_AND2, T_OR2, T_XOR2, lsm_gates, transistor_count, _cla_transistors,
+    T_AND2, T_OR2, T_XOR2, lsm_gates, mul_column_heights,
+    mul_transistor_count, transistor_count, _cla_transistors,
 )
 from repro.core.specs import AdderSpec
 
@@ -145,3 +146,115 @@ def report(spec: AdderSpec) -> HwReport:
 
 def energy_per_add_joules(spec: AdderSpec) -> float:
     return switching_energy_fj(spec) * 1e-15
+
+
+# ------------------------------------------------------- multipliers --
+#
+# Same activity-based model, same (alpha, beta) calibration, applied to
+# the multiplier netlists of repro.core.netlist: switched capacitance ~
+# transistor count, activity measured on the multiplier's own output bus
+# over random vectors.  Model-only (the paper synthesizes adders), but
+# on the same fJ scale, so MAC configurations can be priced against the
+# adder family on one Pareto chart.
+
+
+@dataclasses.dataclass(frozen=True)
+class MulHwReport:
+    spec: object                      # MulSpec (core stays import-light)
+    transistors: int
+    energy_fj: float
+    delay_ns: float
+    power_uw: float
+
+    def row(self) -> Dict[str, object]:
+        return {"mul": self.spec.kind, "N": self.spec.n_bits,
+                "t": self.spec.effective_trunc_bits,
+                "v": self.spec.effective_row_bits,
+                "transistors": self.transistors,
+                "energy_fj": self.energy_fj, "delay_ns": self.delay_ns,
+                "power_uw": self.power_uw}
+
+
+@functools.lru_cache(maxsize=None)
+def _mul_toggle_activity(spec, n_vectors: int = 20000,
+                         seed: int = 13) -> float:
+    """Average per-output-bit toggle rate of the multiplier's product
+    bus over a random vector stream."""
+    from repro.ax.backends import get_backend  # lazy: core loads first
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
+    b = rng.integers(0, 1 << spec.n_bits, size=n_vectors, dtype=np.uint64)
+    p = get_backend("numpy").mul(a, b, spec, strategy="reference")
+    flips = np.bitwise_xor(p[1:], p[:-1])
+    ones = np.unpackbits(flips.view(np.uint8)).sum()
+    return float(ones) / (n_vectors - 1) / spec.product_bits
+
+
+def mul_switching_energy_fj(spec) -> float:
+    alpha, beta = _calibration()
+    return alpha * mul_transistor_count(spec) * _mul_toggle_activity(spec) \
+        + beta
+
+
+def mul_delay_ns(spec) -> float:
+    """Stage-count model on the adder family's per-stage constants:
+    array kinds pay a Dadda-style reduction depth (log_{1.5} of the
+    tallest kept column) plus the final CPA's group chain; Mitchell
+    pays LOD + barrel-shifter depth plus its mantissa adder chain."""
+    a_c, b_c = 0.12, 0.015
+    n = spec.n_bits
+    if spec.kind == "mitchell":
+        lod_shift = 2 * max(1, (n - 1).bit_length())
+        groups = -(-2 * (n - spec.effective_trunc_bits) // 4)
+        return a_c + b_c * (lod_shift + groups)
+    hmax = max(mul_column_heights(spec) + [1])
+    depth = 0
+    h = 1
+    while h < hmax:
+        h = (h * 3 + 1) // 2           # Dadda column-height sequence
+        depth += 1
+    groups = -(-2 * n // 4)
+    return a_c + b_c * (depth + groups)
+
+
+def mul_report(spec) -> MulHwReport:
+    e = mul_switching_energy_fj(spec)
+    d = mul_delay_ns(spec)
+    return MulHwReport(spec=spec, transistors=mul_transistor_count(spec),
+                       energy_fj=e, delay_ns=d, power_uw=e / d)
+
+
+@dataclasses.dataclass(frozen=True)
+class MacHwReport:
+    """One multiply-accumulate lane: multiplier followed by the
+    accumulating adder (serial critical path, summed energy/area)."""
+    adder: HwReport
+    mul: MulHwReport
+    transistors: int
+    energy_fj: float
+    delay_ns: float
+    power_uw: float
+
+    def row(self) -> Dict[str, object]:
+        return {"adder": self.adder.spec.kind,
+                "mul": self.mul.spec.kind,
+                "mul_N": self.mul.spec.n_bits,
+                "mul_t": self.mul.spec.effective_trunc_bits,
+                "mul_v": self.mul.spec.effective_row_bits,
+                "transistors": self.transistors,
+                "energy_fj": self.energy_fj, "delay_ns": self.delay_ns,
+                "power_uw": self.power_uw}
+
+
+def mac_report(adder_spec: AdderSpec, mul_spec) -> MacHwReport:
+    ar = report(adder_spec)
+    mr = mul_report(mul_spec)
+    e = ar.energy_fj + mr.energy_fj
+    d = ar.delay_ns + mr.delay_ns
+    return MacHwReport(adder=ar, mul=mr,
+                       transistors=ar.transistors + mr.transistors,
+                       energy_fj=e, delay_ns=d, power_uw=e / d)
+
+
+def energy_per_mac_joules(adder_spec: AdderSpec, mul_spec) -> float:
+    return mac_report(adder_spec, mul_spec).energy_fj * 1e-15

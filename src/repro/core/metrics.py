@@ -20,11 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterable, List, Optional
+from typing import TYPE_CHECKING, Dict, Iterable, List, Optional
 
 import numpy as np
 
 from repro.core.specs import AdderSpec
+
+if TYPE_CHECKING:  # core loads before repro.ax; runtime imports are lazy
+    from repro.ax.mul.specs import MulSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +344,124 @@ def exact_error_metrics_sweep(
     from repro.ax.analytics import exact_error_metrics_sweep as _sweep
     return _sweep(specs, backend=backend, method=method,
                   cache_tables=cache_tables)
+
+
+# ------------------------------------------------------ multipliers --
+
+@dataclasses.dataclass(frozen=True)
+class MulErrorReport:
+    """Error metrics for one multiplier configuration.
+
+    Same five paper metrics as :class:`ErrorReport`, but normalized to
+    the multiplier's output range: the exact reference is the product
+    ``a*b`` (max ``(2^N - 1)^2``), and MRED's relative errors divide by
+    it, excluding zero-product pairs (``a = 0`` or ``b = 0`` — every
+    registered kind is errorless there, so the exclusion only guards
+    the 0/0 ratio, matching the adder convention for ``S = 0``).
+    """
+
+    spec: "MulSpec"
+    n_samples: int
+    med: float
+    mred: float
+    nmed: float
+    error_rate: float
+    wce: int
+    exact: bool = False
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "mul": self.spec.kind,
+            "N": self.spec.n_bits,
+            "t": self.spec.effective_trunc_bits,
+            "v": self.spec.effective_row_bits,
+            "samples": self.n_samples,
+            "MED": self.med,
+            "MRED": self.mred,
+            "NMED": self.nmed,
+            "ER": self.error_rate,
+            "WCE": self.wce,
+            "exact": self.exact,
+        }
+
+
+def mul_population_report(spec: "MulSpec", ed: np.ndarray,
+                          s: np.ndarray) -> MulErrorReport:
+    """The canonical full-population reduction over per-pair error
+    distances ``ed = |approx - a*b|`` and exact products ``s``.
+
+    Shared by :func:`exhaustive_mul_error_metrics` and the table-driven
+    ``method="compose"`` path in :mod:`repro.ax.analytics` — one
+    reduction, so the two are bit-identical by construction: MED/ER are
+    exact integer totals with one correctly-rounded division, and MRED
+    groups integer numerators by exact product before an
+    exactly-rounded (order-independent) :func:`math.fsum`.
+    """
+    n_bits = spec.n_bits
+    pop = ed.size
+    max_out = float(((1 << n_bits) - 1) ** 2)
+    med = float(int(ed.sum())) / float(pop)
+    # T[S] = sum of |ED| over pairs with exact product S (every T[S] an
+    # integer below 2^53 for N <= 12); S = 0 pairs are excluded.
+    t = np.bincount(s, weights=ed.astype(np.float64),
+                    minlength=((1 << n_bits) - 1) ** 2 + 1)
+    sums = np.arange(t.size, dtype=np.float64)
+    nz = np.flatnonzero(t[1:] != 0.0) + 1
+    mred = math.fsum((t[nz] / sums[nz]).tolist()) / float(pop)
+    return MulErrorReport(
+        spec=spec,
+        n_samples=pop,
+        med=med,
+        mred=mred,
+        nmed=med / max_out,
+        error_rate=float(int((ed != 0).sum())) / float(pop),
+        wce=int(ed.max(initial=0)),
+        exact=True,
+    )
+
+
+def exhaustive_mul_error_metrics(spec: "MulSpec",
+                                 strategy: str = "reference",
+                                 ) -> MulErrorReport:
+    """Exact multiplier metrics by full 4^N enumeration (N <= 12).
+
+    ``strategy`` picks the evaluation path (reference / fused / lut —
+    all bit-identical, enforced by tests/test_mul.py); the closed-form
+    analytics (:func:`exact_mul_error_metrics`) must match this
+    bit-for-bit.
+    """
+    n_bits = spec.n_bits
+    if n_bits > 12:
+        raise ValueError("exhaustive enumeration is limited to N <= 12")
+    from repro.ax.mul import approx_mul, lut_mul  # lazy: core loads first
+    vals = np.arange(1 << n_bits, dtype=np.uint64)
+    a = np.repeat(vals, 1 << n_bits)
+    b = np.tile(vals, 1 << n_bits)
+    if strategy == "lut":
+        approx = lut_mul(a, b, spec)
+    else:
+        approx = approx_mul(a, b, spec, fast=(strategy == "fused"))
+    s = (a * b).astype(np.int64)
+    ed = np.abs(approx.astype(np.int64) - s)
+    return mul_population_report(spec, ed, s)
+
+
+def exact_mul_error_metrics(spec: "MulSpec", method: str = "auto",
+                            ) -> MulErrorReport:
+    """Exact closed-form multiplier metrics — no enumeration required
+    for the ``method="closed"`` factorization (see
+    :mod:`repro.ax.analytics` for the formulation)."""
+    from repro.ax.analytics import exact_mul_error_metrics as _exact
+    return _exact(spec, method=method)
+
+
+def exact_mul_error_metrics_sweep(
+    specs: "Iterable[MulSpec]",
+    method: str = "auto",
+    cache_tables: bool = True,
+) -> "List[MulErrorReport]":
+    from repro.ax.analytics import exact_mul_error_metrics_sweep as _sweep
+    return _sweep(specs, method=method, cache_tables=cache_tables)
 
 
 def summarize(reports: Iterable[ErrorReport]) -> str:

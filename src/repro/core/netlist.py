@@ -112,3 +112,88 @@ def transistor_count(spec: AdderSpec) -> int:
 def gate_count(spec: AdderSpec) -> int:
     g = lsm_gates(spec)
     return sum(g.values())
+
+
+# ------------------------------------------------------- multipliers --
+#
+# Area model for the approximate multiplier family (repro.ax.mul) —
+# model-only (the paper synthesizes adders, not multipliers; these
+# counts price the MAC design space on the same transistor scale).
+#
+# Array kinds (accurate / truncated / broken_array): one AND2 per kept
+# partial-product cell (the kind's keep predicate is exactly the one
+# the behavioral impls realize), plus one mirror-FA-priced reduction
+# cell per column-height reduction step: a column of height k needs
+# k - 1 compressions counting both the Dadda tree and the final CPA.
+# Pruned cells therefore discount both their AND gate and their share
+# of the reduction tree.
+#
+# Mitchell is not an array: two leading-one detectors (~(N-1) OR2 +
+# N AND2 each), two log-domain barrel shifters (ceil(log2 N) stages of
+# 2:1 transmission-gate muxes over the N - t mantissa bits), and one
+# (2(N-t))-bit carry adder for the characteristic/mantissa sum; operand
+# truncation t narrows the shifter and adder datapaths.
+
+T_MUX2 = 6
+
+_MUL_ARRAY_KINDS = ("accurate", "truncated", "broken_array")
+
+
+def _mul_cell_kept(kind: str, i: int, j: int, hbl: int, vbl: int) -> bool:
+    """Whether partial-product cell (row i = b_i, column j = a_j)
+    survives pruning — the same predicate the behavioral impls apply."""
+    if kind == "truncated":
+        return i + j >= hbl
+    if kind == "broken_array":
+        return j >= (vbl if vbl > hbl - i else hbl - i)
+    return True
+
+
+def mul_column_heights(spec) -> list:
+    """Kept partial-product cells per output column (c = i + j) of the
+    pruned AND array — the reduction tree's per-column workload."""
+    n = spec.n_bits
+    hbl, vbl = spec.effective_trunc_bits, spec.effective_row_bits
+    cols = [0] * (2 * n - 1)
+    for i in range(n):
+        for j in range(n):
+            if _mul_cell_kept(spec.kind, i, j, hbl, vbl):
+                cols[i + j] += 1
+    return cols
+
+
+def mul_gates(spec) -> Dict[str, int]:
+    """Gate inventory of the multiplier ({"and2", "or2", "mux2", "fa"};
+    the Mitchell adder is priced separately in
+    :func:`mul_transistor_count`)."""
+    n = spec.n_bits
+    g: Dict[str, int] = {"and2": 0, "or2": 0, "mux2": 0, "fa": 0}
+    if spec.kind in _MUL_ARRAY_KINDS:
+        heights = mul_column_heights(spec)
+        g["and2"] = sum(heights)
+        g["fa"] = sum(h - 1 for h in heights if h > 1)
+        return g
+    if spec.kind == "mitchell":
+        t = spec.effective_trunc_bits
+        stages = max(1, (n - 1).bit_length())
+        g["or2"] = 2 * (n - 1)
+        g["and2"] = 2 * n
+        g["mux2"] = 2 * stages * (n - t)
+        return g
+    raise ValueError(
+        f"no netlist model for multiplier kind {spec.kind!r}; the area "
+        f"model covers the builtin family only")
+
+
+def mul_transistor_count(spec) -> int:
+    g = mul_gates(spec)
+    t = (g["and2"] * T_AND2 + g["or2"] * T_OR2 + g["mux2"] * T_MUX2
+         + g["fa"] * T_FA_MIRROR)
+    if spec.kind == "mitchell":
+        width = 2 * (spec.n_bits - spec.effective_trunc_bits)
+        t += _cla_transistors(width)
+    return t
+
+
+def mul_gate_count(spec) -> int:
+    return sum(mul_gates(spec).values())

@@ -172,6 +172,65 @@ def _register_pipelines():
 _register_pipelines()
 
 
+# -------------------------------------------------- MAC conv workload --
+
+#: 3x3 learned-style smoothing kernel with a non-power-of-two weight
+#: sum (21): every tap product must run a real multiplier — no
+#: shift-and-add escape hatch — which is exactly what the MAC datapath
+#: (engine.conv2d) exists for.
+CONV3X3_KERNEL = ((1, 3, 1), (3, 5, 3), (1, 3, 1))
+_CONV3X3_SUM = 21
+
+
+def _conv3x3_engine(kind, backend, strategy, mul):
+    from repro.ax.mul import MulSpec
+    if mul is None:
+        mul = MulSpec("truncated", n_bits=8, trunc_bits=3)
+    return ops_lib.make_image_engine(kind, backend=backend,
+                                     strategy=strategy).replace(mul=mul)
+
+
+def _conv3x3_run(imgs, kind="haloc_axa", backend=None, fast=False,
+                 strategy=None, mul=None):
+    """3x3 MAC convolution through ``engine.conv2d``: pixel values
+    (|q| < 2^8, the 8-bit multiplier operand domain) hit the
+    approximate multiplier at every tap, tap sums fold through the
+    N=16 approximate adder (headroom: 255 * 21 = 5355 < 2^15), and the
+    /21 normalization is one exact host-side rounded division.  ``mul``
+    accepts a MulSpec or kind name (default: truncated t=3)."""
+    from repro.ax.backends import resolve_strategy
+    strategy = resolve_strategy(strategy, fast)
+    ax = _conv3x3_engine(kind, backend, strategy, mul)
+    imgs = np.asarray(imgs)
+    if ax.backend.name == "numpy":
+        q = imgs.astype(np.int32)
+    else:
+        q = jnp.asarray(imgs, jnp.int32)
+    v = np.asarray(ax.conv2d(q, CONV3X3_KERNEL)).astype(np.int64)
+    out = (v + _CONV3X3_SUM // 2) // _CONV3X3_SUM
+    return np.clip(out, 0, 255).astype(np.uint8)
+
+
+def _conv3x3_reference(imgs, mul=None, **_kw):
+    """Exact integer conv + the same rounded /21 — so an exact adder AND
+    exact multiplier reproduce it bit-for-bit (``mul`` is an execution
+    knob; every config scores against this one golden)."""
+    del mul
+    x = np.asarray(imgs).astype(np.int64)
+    p = np.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)], mode="edge")
+    h, w = x.shape[-2], x.shape[-1]
+    acc = np.zeros_like(x)
+    for dy, row in enumerate(CONV3X3_KERNEL):
+        for dx, wt in enumerate(row):
+            acc = acc + wt * p[..., dy:dy + h, dx:dx + w]
+    out = (acc + _CONV3X3_SUM // 2) // _CONV3X3_SUM
+    return np.clip(out, 0, 255).astype(np.uint8)
+
+
+register_workload(Workload(name="conv3x3", run=_conv3x3_run,
+                           reference=_conv3x3_reference))
+
+
 # -------------------------------------------- FFT->IFFT reconstruction --
 
 def _fft_run(imgs, kind="haloc_axa", backend: Optional[str] = None,
