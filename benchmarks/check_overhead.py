@@ -1,0 +1,70 @@
+"""CI guard: telemetry must be free when it is off.
+
+``bench_imgproc``'s telemetry section measures three configs of the
+fused+tiled megapixel fast path in ONE process on ONE machine:
+``baseline-raw`` (the pristine jitted callable, no hooks),
+``telemetry-off`` (the instrumented dispatch path, flag off) and
+``telemetry-on``.  Each record carries ``overhead_pct`` relative to
+baseline-raw.  This check reads the freshly written
+``BENCH_imgproc.json`` and fails if the DISABLED overhead exceeds the
+bound — the "zero-cost when off" contract of ``repro.obs``, enforced
+per commit.  Because both sides of the ratio come from the same run,
+the check is immune to host-speed drift between CI machines.
+
+Measurement noise is real at sub-percent effects, so the bound is
+checked against the overhead minus the run's own observed jitter: a
+run whose rounds spread 3% cannot convict a 2% bound.  It also warns
+(without failing) when the ENABLED overhead looks pathological.
+
+    python benchmarks/check_overhead.py [--bound 2.0] [BENCH_imgproc.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str = "BENCH_imgproc.json", bound_pct: float = 2.0) -> int:
+    with open(path) as f:
+        records = json.load(f)
+    cells = {r["config"]: r for r in records
+             if r.get("op") == "mega/telemetry"}
+    if "telemetry-off" not in cells or "baseline-raw" not in cells:
+        print(f"FAIL: {path} has no mega/telemetry records "
+              f"(got configs {sorted(cells)}); run "
+              f"benchmarks/run.py first")
+        return 1
+    off = cells["telemetry-off"]
+    overhead = float(off["overhead_pct"])
+    # Both configs' round spread bounds the measurement noise; use the
+    # larger so a noisy baseline cannot manufacture a violation either.
+    noise = max(float(off.get("jitter_pct", 0.0)),
+                float(cells["baseline-raw"].get("jitter_pct", 0.0)))
+    effective = overhead - noise
+    verdict = "OK" if effective <= bound_pct else "FAIL"
+    print(f"{verdict}: disabled-telemetry overhead {overhead:+.2f}% "
+          f"(measurement jitter {noise:.2f}%, effective "
+          f"{effective:+.2f}%) vs bound {bound_pct:.1f}% "
+          f"[{off['batch']}, tile={off.get('tile')}]")
+    on = cells.get("telemetry-on")
+    if on is not None and float(on["overhead_pct"]) > 100.0:
+        print(f"warning: ENABLED telemetry costs "
+              f"{float(on['overhead_pct']):+.1f}% — profiling runs "
+              f"more than double the wall time; check span volume")
+    return 0 if verdict == "OK" else 1
+
+
+def main() -> int:
+    argv = list(sys.argv[1:])
+    bound = 2.0
+    if "--bound" in argv:
+        i = argv.index("--bound")
+        bound = float(argv[i + 1])
+        del argv[i:i + 2]
+    path = argv[0] if argv else "BENCH_imgproc.json"
+    return check(path, bound)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

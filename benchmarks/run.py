@@ -41,14 +41,40 @@ METRIC_FIELDS = frozenset({
     # exact error analytics + hw cost model (BENCH_table1/BENCH_mac)
     "med", "mred", "nmed", "er", "wce",
     "energy_fj", "delay_ns", "power_uw", "transistors",
+    # timing-quality and telemetry metrics (repro.obs instrumentation)
+    "wall_ms_spread", "jitter_pct", "overhead_pct",
+    "p50_ms", "p95_ms", "p99_ms",
+})
+
+#: Fields that describe the MACHINE a record was measured on.  They are
+#: provenance, not identity: excluded from ``record_key`` so a record
+#: stamped on one host updates the committed cell measured on another
+#: instead of forking the trajectory — and so records written before
+#: stamping existed merge cleanly with stamped re-measurements.
+PROVENANCE_FIELDS = frozenset({
+    "host_platform", "jax_version", "device_kind",
 })
 
 
+def provenance() -> dict:
+    """The machine stamp added to every record at dump time."""
+    import platform
+
+    import jax
+    return {
+        "host_platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "device_kind": jax.devices()[0].device_kind,
+    }
+
+
 def record_key(rec: dict):
-    """The identity of a trajectory record: its non-metric fields."""
+    """The identity of a trajectory record: its non-metric,
+    non-provenance fields."""
     return tuple(sorted((k, json.dumps(v, sort_keys=True))
                         for k, v in rec.items()
-                        if k not in METRIC_FIELDS))
+                        if k not in METRIC_FIELDS
+                        and k not in PROVENANCE_FIELDS))
 
 
 def merge_records(existing, new):
@@ -62,6 +88,8 @@ def merge_records(existing, new):
 
 
 def _dump(path: str, records) -> None:
+    stamp = provenance()
+    records = [{**rec, **stamp} for rec in records]
     existing = []
     if os.path.exists(path):
         with open(path) as f:

@@ -8,27 +8,77 @@ too — it passes non-device values through), reporting the BEST round.
 Best-of-rounds is the standard defence against CPU contention and
 frequency scaling: noise only ever adds time, so the minimum is the
 closest observation of the true cost.
+
+The return value is a :class:`TimingResult` — a ``float`` subclass
+equal to the best round, so every existing call site keeps working
+unchanged (``rec["wall_ms"] = t * 1e3``) — that also carries the
+per-round times and their spread, which is what lets benchmark records
+report measurement jitter alongside the point estimate.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Tuple
 
 import jax
 
 
+class TimingResult(float):
+    """Best-of-rounds seconds per call, as a float, plus the evidence.
+
+    ``float(r)`` (and any arithmetic) is the best round — drop-in for
+    the plain-float return this function used to have.  ``r.rounds``
+    holds every round's seconds-per-call, ``r.mean``/``r.spread`` the
+    usual summaries, and ``r.jitter`` the spread as a fraction of the
+    best round (how noisy this measurement was — trajectory checks use
+    it to judge whether a throughput delta is signal)."""
+
+    rounds: Tuple[float, ...]
+
+    def __new__(cls, rounds):
+        rounds = tuple(float(r) for r in rounds)
+        if not rounds:
+            raise ValueError("TimingResult needs at least one round")
+        self = super().__new__(cls, min(rounds))
+        self.rounds = rounds
+        return self
+
+    @property
+    def best(self) -> float:
+        return float(self)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.rounds) / len(self.rounds)
+
+    @property
+    def spread(self) -> float:
+        """Max minus min round: the observed measurement window."""
+        return max(self.rounds) - min(self.rounds)
+
+    @property
+    def jitter(self) -> float:
+        """Spread over best — 0.02 means the worst round was 2% slower."""
+        return self.spread / float(self) if float(self) else 0.0
+
+    def __repr__(self) -> str:
+        return (f"TimingResult(best={float(self):.6g}s, "
+                f"rounds={len(self.rounds)}, jitter={self.jitter:.1%})")
+
+
 def timeit_jax(fn: Callable, *args, reps: int = 5, rounds: int = 3,
-               warmup: int = 1, **kw) -> float:
+               warmup: int = 1, **kw) -> TimingResult:
     """Seconds per call of ``fn(*args, **kw)``: compile excluded
     (``warmup`` untimed calls), device-synced (``block_until_ready``),
-    best of ``rounds`` rounds of ``reps`` calls."""
+    best of ``rounds`` rounds of ``reps`` calls.  Returns a
+    :class:`TimingResult` (a float equal to the best round)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
-    best = float("inf")
+    times = []
     for _ in range(rounds):
         t0 = time.perf_counter()
         for _ in range(reps):
             jax.block_until_ready(fn(*args, **kw))
-        best = min(best, (time.perf_counter() - t0) / reps)
-    return best
+        times.append((time.perf_counter() - t0) / reps)
+    return TimingResult(times)

@@ -77,6 +77,7 @@ from repro.ax.lut import (
 )
 from repro.core.metrics import ErrorReport
 from repro.core.specs import AdderSpec
+from repro.obs.caches import register_lru as _register_lru
 
 #: ``method="auto"`` composes exactly up to this width and uses the
 #: digamma closed form above it (the exact path scatters into a
@@ -190,6 +191,9 @@ def _jax_low_stats_fn(m: int, moments: bool):
     return f
 
 
+_register_lru("ax.analytics.jax_reduce", _jax_low_stats_fn)
+
+
 def _low_stats_jax(d: np.ndarray, m: int, moments: bool) -> _LowStats:
     import jax.numpy as jnp
     res = _jax_low_stats_fn(m, moments)(jnp.asarray(d, dtype=jnp.int32))
@@ -267,6 +271,9 @@ def _reciprocal_tables(n_bits: int, m: int) -> Tuple[np.ndarray, np.ndarray]:
     r1.flags.writeable = False
     r2.flags.writeable = False
     return r1, r2
+
+
+_register_lru("ax.analytics.reciprocals", _reciprocal_tables)
 
 
 def _compose_numerators(u: np.ndarray, n_bits: int, m: int) -> np.ndarray:
@@ -571,6 +578,9 @@ def _mul_reciprocals(n_bits: int, t: int) -> np.ndarray:
     r = np.concatenate([[r0], r])
     r.flags.writeable = False
     return r
+
+
+_register_lru("ax.analytics.mul_reciprocals", _mul_reciprocals)
 
 
 def _mul_compose_report(spec, cache_tables: bool):

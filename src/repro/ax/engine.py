@@ -27,6 +27,9 @@ import numpy as np
 
 from repro.ax.backends import Backend, check_strategy, get_backend, \
     resolve_strategy
+from repro.obs import drift as _drift
+from repro.obs import trace as _obs
+from repro.obs.caches import register_lru as _register_lru
 from repro.ax.lut import lut_supported
 from repro.ax.mul import (
     MAX_MUL_LUT_BITS,
@@ -83,6 +86,13 @@ class AxEngine:
 
     def add(self, a, b):
         """Elementwise approximate add mod 2^N on N-bit containers."""
+        if _obs._ENABLED:
+            with _obs.span("ax:add", kind=self.spec.kind,
+                           backend=self.backend.name):
+                out = self.backend.add(a, b, self.spec,
+                                       strategy=self.strategy)
+            _drift.capture_add(self.spec, a, b)
+            return out
         return self.backend.add(a, b, self.spec, strategy=self.strategy)
 
     def add_full(self, a, b):
@@ -95,6 +105,12 @@ class AxEngine:
         backend dispatch (one fused kernel on the Pallas backends, not
         K-1 sequential ``add`` calls).  ``weights`` are K static ints,
         multiplied exactly before the K-1 approximate adds."""
+        if _obs._ENABLED:
+            out = self.backend.accumulate(terms, self.spec,
+                                          weights=weights,
+                                          strategy=self.strategy)
+            _drift.capture_accumulate(self.spec, terms, weights, out)
+            return out
         return self.backend.accumulate(terms, self.spec, weights=weights,
                                        strategy=self.strategy)
 
@@ -106,6 +122,11 @@ class AxEngine:
         multi-stage VMEM-resident kernel on the Pallas backends; one
         ``accumulate`` dispatch per stage elsewhere."""
         self._require_fmt("filter_chain")
+        if _obs._ENABLED:
+            out = self.backend.filter_chain(q, self.spec, tuple(stages),
+                                            strategy=self.strategy)
+            _drift.capture_filter_chain(self.spec, q, tuple(stages), out)
+            return out
         return self.backend.filter_chain(q, self.spec, tuple(stages),
                                          strategy=self.strategy)
 
@@ -137,8 +158,11 @@ class AxEngine:
         integer weights with odd dimensions."""
         self._require_fmt("conv2d")
         ms = self._require_mul("conv2d")
-        return self.backend.conv2d(q, self.spec, ms, kernel,
-                                   shift=shift, strategy=self.strategy)
+        with _obs.span("ax:conv2d", kind=self.spec.kind, mul=ms.kind,
+                       backend=self.backend.name) if _obs._ENABLED \
+                else _obs._NOOP:
+            return self.backend.conv2d(q, self.spec, ms, kernel,
+                                       shift=shift, strategy=self.strategy)
 
     # --------------------------------------------------------- fixed point
 
@@ -203,9 +227,12 @@ class AxEngine:
         """int8 GEMM with approximate inter-K-tile accumulation.  On a
         MAC engine (``mul_spec`` set) every product additionally runs
         the approximate multiplier."""
-        return self.backend.matmul(a, b, self.spec, block=block,
-                                   strategy=self.strategy,
-                                   mul_spec=self.mul_spec)
+        with _obs.span("ax:matmul", kind=self.spec.kind,
+                       backend=self.backend.name) if _obs._ENABLED \
+                else _obs._NOOP:
+            return self.backend.matmul(a, b, self.spec, block=block,
+                                       strategy=self.strategy,
+                                       mul_spec=self.mul_spec)
 
     def butterfly(self, a_re, a_im, b_re, b_im, w_re, w_im,
                   inverse: bool = False):
@@ -308,6 +335,9 @@ def _make_engine_cached(spec: AdderSpec, fmt: Optional[FixedPointFormat],
                         mul_spec: Optional[MulSpec]) -> AxEngine:
     return AxEngine(spec=spec, fmt=fmt, backend=backend, strategy=strategy,
                     mul_spec=mul_spec)
+
+
+_register_lru("ax.engine", _make_engine_cached)
 
 
 def make_engine(spec: Union[AdderSpec, MacSpec, str],

@@ -32,6 +32,7 @@ import functools
 import numpy as np
 
 from repro.core.specs import AdderSpec
+from repro.obs.caches import register_lru as _register_lru
 
 #: Widest LSM the LUT strategy compiles (2^{2m} uint16 entries).
 MAX_LUT_LSM_BITS = 12
@@ -136,6 +137,10 @@ def error_delta_table(spec: AdderSpec) -> np.ndarray:
     return _delta_from_packed(compile_lut(spec), spec.lsm_bits)
 
 
+_register_lru("ax.lut.packed", compile_lut)
+_register_lru("ax.lut.delta", error_delta_table)
+
+
 def error_delta_table_nocache(spec: AdderSpec) -> np.ndarray:
     """Like :func:`error_delta_table` but built transiently, NOT cached.
 
@@ -160,6 +165,9 @@ def abs_error_table(spec: AdderSpec) -> np.ndarray:
     ed = np.abs(error_delta_table(spec)).astype(np.uint16)
     ed.flags.writeable = False
     return ed
+
+
+_register_lru("ax.lut.abs_error", abs_error_table)
 
 
 def lut_index(a, b, spec: AdderSpec):

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.ax.mul.registry import get_multiplier
 from repro.ax.mul.specs import MulSpec
+from repro.obs.caches import register_lru as _register_lru
 
 # Full-domain tables: 4^10 = 1M entries is the largest we compile.
 MAX_MUL_LUT_BITS = 10
@@ -91,6 +92,9 @@ def _mul_lut_cached(spec: MulSpec) -> np.ndarray:
     return _mul_lut_nocache(spec)
 
 
+_register_lru("ax.mul.lut.product", _mul_lut_cached)
+
+
 def compile_mul_lut(spec: MulSpec) -> np.ndarray:
     """Unsigned full-product table ``T[(a << N) | b] = approx(a, b)``."""
     return _mul_lut_cached(_canonical(spec))
@@ -113,6 +117,9 @@ def mul_error_delta_table_nocache(spec: MulSpec) -> np.ndarray:
 @functools.lru_cache(maxsize=None)
 def _delta_cached(spec: MulSpec) -> np.ndarray:
     return mul_error_delta_table_nocache(spec)
+
+
+_register_lru("ax.mul.lut.delta", _delta_cached)
 
 
 def mul_error_delta_table(spec: MulSpec) -> np.ndarray:
@@ -153,6 +160,9 @@ def _signed_table_cached(spec: MulSpec) -> np.ndarray:
     return table
 
 
+_register_lru("ax.mul.lut.signed", _signed_table_cached)
+
+
 def signed_mul_table(spec: MulSpec) -> np.ndarray:
     """Sign-magnitude product table for signed MAC datapaths.
 
@@ -184,6 +194,9 @@ def _tap_tables_cached(spec: MulSpec,
     table = np.stack(rows)
     table.flags.writeable = False
     return table
+
+
+_register_lru("ax.mul.lut.taps", _tap_tables_cached)
 
 
 def tap_tables(spec: MulSpec, weights: Tuple[int, ...]) -> np.ndarray:

@@ -33,6 +33,7 @@ from repro.core.netlist import (
     mul_transistor_count, transistor_count, _cla_transistors,
 )
 from repro.core.specs import AdderSpec
+from repro.obs.caches import register_lru as _register_lru
 
 # Table-I anchors (paper, 32nm PTM HP, 32-bit, m=10, k=5).
 PAPER_TABLE1 = {
@@ -86,6 +87,9 @@ def _toggle_activity(spec: AdderSpec, n_vectors: int = 20000,
 # single-level gates.  Weight MSM transistors by the adder's output toggle
 # activity and LSM gates by their input activity (0.5 for uniform bits).
 _LSM_ALPHA = 0.5
+
+
+_register_lru("core.hwcost.toggle", _toggle_activity)
 
 
 def _energy_units(spec: AdderSpec) -> float:
@@ -188,6 +192,9 @@ def _mul_toggle_activity(spec, n_vectors: int = 20000,
     flips = np.bitwise_xor(p[1:], p[:-1])
     ones = np.unpackbits(flips.view(np.uint8)).sum()
     return float(ones) / (n_vectors - 1) / spec.product_bits
+
+
+_register_lru("core.hwcost.mul_toggle", _mul_toggle_activity)
 
 
 def mul_switching_energy_fj(spec) -> float:

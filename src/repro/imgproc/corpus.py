@@ -25,6 +25,8 @@ from repro.ax import default_backend_name
 from repro.image.pipeline import synthetic_image
 from repro.image.quality import psnr, quality_band, ssim
 from repro.imgproc.workloads import get_workload, workload_names
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,15 +176,35 @@ class StreamResult:
     ``seconds`` covers the whole stream wall-clock (first dispatch to
     last result on the host); ``mpix_per_s`` is input megapixels over
     that window — the number a serving deployment sees, transfer and
-    host round-trips included."""
+    host round-trips included.
+
+    ``batch_seconds`` holds each batch's observed latency (dispatch to
+    drained-on-host, so with ``depth > 1`` in-flight waiting counts —
+    it is the latency a caller of this runner experiences, not pure
+    device time).  The ``p50/p95/p99`` properties summarize it; they
+    are ``nan`` for results predating the field (old pickles) or empty
+    streams."""
 
     outputs: List[np.ndarray]
     seconds: float
     pixels: int
+    batch_seconds: Tuple[float, ...] = ()
 
     @property
     def mpix_per_s(self) -> float:
         return self.pixels / self.seconds / 1e6
+
+    @property
+    def p50_s(self) -> float:
+        return _metrics.quantile(self.batch_seconds, 50.0)
+
+    @property
+    def p95_s(self) -> float:
+        return _metrics.quantile(self.batch_seconds, 95.0)
+
+    @property
+    def p99_s(self) -> float:
+        return _metrics.quantile(self.batch_seconds, 99.0)
 
 
 def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
@@ -209,17 +231,61 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
         raise ValueError(f"depth must be >= 1; got {depth}")
     pending: collections.deque = collections.deque()
     outputs: List[np.ndarray] = []
+    latencies: List[float] = []
     pixels = 0
+    instrumented = _obs._ENABLED
+    if instrumented:
+        in_flight = _metrics.gauge("stream.batches_in_flight")
+        lat_hist = _metrics.histogram("stream.batch_seconds")
+        n_batches = _metrics.counter("stream.batches")
+        n_pixels = _metrics.counter("stream.pixels")
+
+    def drain():
+        # Draining materializes the device future on the host: THE sync
+        # point of the stream (np.asarray blocks until ready).
+        td, fut = pending.popleft()
+        if instrumented:
+            with _obs.span("stream:drain", batch=len(outputs)):
+                outputs.append(np.asarray(fut))
+            in_flight.dec()
+        else:
+            outputs.append(np.asarray(fut))
+        lat = time.perf_counter() - td
+        latencies.append(lat)
+        if instrumented:
+            lat_hist.record(lat)
+
     t0 = time.perf_counter()
     for batch in batches:
-        pixels += int(np.prod(np.shape(batch)))
-        pending.append(fn(batch))
+        n = int(np.prod(np.shape(batch)))
+        pixels += n
+        if instrumented:
+            with _obs.span("stream:dispatch", batch=len(latencies)
+                           + len(pending)):
+                pending.append((time.perf_counter(), fn(batch)))
+            in_flight.inc()
+            n_batches.inc()
+            n_pixels.inc(n)
+        else:
+            pending.append((time.perf_counter(), fn(batch)))
         while len(pending) >= depth:
-            outputs.append(np.asarray(pending.popleft()))
+            drain()
     while pending:
-        outputs.append(np.asarray(pending.popleft()))
+        drain()
     return StreamResult(outputs=outputs,
-                        seconds=time.perf_counter() - t0, pixels=pixels)
+                        seconds=time.perf_counter() - t0, pixels=pixels,
+                        batch_seconds=tuple(latencies))
+
+
+def _psnr_cell(psnr_db: float) -> str:
+    """Render a PSNR for the table: lossless cells say so explicitly
+    (" inf"), anything >= 99 dB keeps its real value (">=99" marks the
+    overflow of the 5-char column) — nothing silently clamps to 99.0."""
+    if not np.isfinite(psnr_db):
+        return "  inf"
+    if psnr_db >= 99.0:
+        return " >=99"
+    return f"{psnr_db:5.1f}"
 
 
 def format_table(rows: Sequence[CorpusResult]) -> str:
@@ -235,6 +301,6 @@ def format_table(rows: Sequence[CorpusResult]) -> str:
         for n in names:
             r = cell.get((k, n))
             row.append(" " * width if r is None else
-                       f"{min(r.psnr, 99.0):5.1f}/{r.ssim:.3f}".rjust(width))
+                       f"{_psnr_cell(r.psnr)}/{r.ssim:.3f}".rjust(width))
         lines.append("".join(row))
     return "\n".join(lines)

@@ -61,6 +61,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.imgproc import ops as ops_lib
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
+from repro.obs.caches import register_lru as _register_lru
 
 #: One stage: an operator name, optionally with fixed keyword arguments.
 StageSpec = Union[str, Tuple[str, Dict[str, Any]]]
@@ -128,6 +131,14 @@ class CompiledPipeline:
     downs: Tuple[int, ...] = ()
 
     def __call__(self, imgs):
+        if _obs._ENABLED:
+            with _obs.span("plan:call", stages=self.stage_names,
+                           requant=self.requant,
+                           backend=self.engine.backend.name):
+                out = self.fn(imgs)
+            _metrics.counter("plan.pixels_in").inc(
+                int(np.prod(np.shape(imgs))))
+            return out
         return self.fn(imgs)
 
     @property
@@ -168,7 +179,16 @@ def _stage_chain(stages, ax) -> Callable:
     def chain(img):
         x = img
         for name, kw_items in stages:
-            x = ops_lib.get_operator(name).fn(x, ax, **dict(kw_items))
+            # On the jax backends this chain runs under jit: the span
+            # fires at TRACE time only (it labels compilation, and —
+            # on the numpy host engine — every per-stage execution,
+            # which is what gives drift capture its stage attribution).
+            if _obs._ENABLED:
+                with _obs.span(f"stage:{name}"):
+                    x = ops_lib.get_operator(name).fn(x, ax,
+                                                      **dict(kw_items))
+            else:
+                x = ops_lib.get_operator(name).fn(x, ax, **dict(kw_items))
         return x
 
     return chain
@@ -197,7 +217,11 @@ def _fused_chain(stages, ax) -> Callable:
     def chain(img):
         q = jnp.asarray(img, jnp.int32) << qforms[0].in_frac
         for i, ((name, kw_items), qf) in enumerate(zip(stages, qforms)):
-            q = qf.fn(q, ax, **dict(kw_items))
+            if _obs._ENABLED:
+                with _obs.span(f"stage:{name}", requant="fused"):
+                    q = qf.fn(q, ax, **dict(kw_items))
+            else:
+                q = qf.fn(q, ax, **dict(kw_items))
             f = qf.out_frac
             if i + 1 < len(qforms):
                 # The integer seam: round half up to whole gray levels,
@@ -215,6 +239,19 @@ def _fused_chain(stages, ax) -> Callable:
 @functools.lru_cache(maxsize=None)
 def _compile_cached(stages, kind, backend_name, strategy, n_bits,
                     requant) -> CompiledPipeline:
+    with _obs.span("plan:compile", kind=kind, backend=backend_name,
+                   requant=requant,
+                   stages=tuple(n for n, _ in stages)) \
+            if _obs._ENABLED else _obs._NOOP:
+        return _compile_uncached(stages, kind, backend_name, strategy,
+                                 n_bits, requant)
+
+
+_register_lru("imgproc.plan.compiled", _compile_cached)
+
+
+def _compile_uncached(stages, kind, backend_name, strategy, n_bits,
+                      requant) -> CompiledPipeline:
     ax = ops_lib.make_image_engine(kind, backend=backend_name,
                                    strategy=strategy, n_bits=n_bits)
     qforms = [ops_lib.get_operator(name).qform for name, _ in stages]

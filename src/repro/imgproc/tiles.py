@@ -50,6 +50,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.imgproc.plan import CompiledPipeline, compile_pipeline
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
+from repro.obs.caches import register_lru as _register_lru
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,19 +146,22 @@ def _compile_tiled_cached(pipe: CompiledPipeline, shape: Tuple[int, ...],
             imgs = np.asarray(imgs)
             out = np.zeros(imgs.shape[:lead] + out_hw, np.uint8)
             for rs, ro, rf, cs, co, cf in grid:
-                y = np.asarray(pipe.chain(
-                    imgs[..., rs:rs + rows.size, cs:cs + cols.size]))
+                with _obs.span("tiles:tile", row=ro, col=co) \
+                        if _obs._ENABLED else _obs._NOOP:
+                    y = np.asarray(pipe.chain(
+                        imgs[..., rs:rs + rows.size, cs:cs + cols.size]))
                 out[..., ro:ro + rows.tile_out, co:co + cols.tile_out] = \
                     y[..., rf:rf + rows.tile_out, cf:cf + cols.tile_out]
             return out
 
+        run_host.raw = run_host
         return run_host
 
     idx = jnp.asarray(grid, jnp.int32)
     zeros = (0,) * lead
 
     @jax.jit
-    def run(imgs):
+    def run_jit(imgs):
         def step(out, ix):
             region = jax.lax.dynamic_slice(
                 imgs, zeros + (ix[0], ix[3]),
@@ -174,7 +180,27 @@ def _compile_tiled_cached(pipe: CompiledPipeline, shape: Tuple[int, ...],
         out, _ = jax.lax.scan(step, out, idx)
         return out
 
+    def run(imgs):
+        # Host-side dispatch hook: the span measures enqueue time, NOT
+        # device completion — it deliberately never forces a sync (that
+        # would destroy the streaming double-buffer overlap).  When the
+        # flag is off this wrapper costs one branch per dispatch; the
+        # pristine jitted callable stays reachable as ``run.raw`` so
+        # the overhead benchmark can measure a true hook-free baseline.
+        if _obs._ENABLED:
+            with _obs.span("tiles:dispatch", tiles=len(grid),
+                           shape=shape):
+                out = run_jit(imgs)
+            _metrics.counter("tiles.dispatches").inc()
+            _metrics.counter("tiles.tiles_dispatched").inc(len(grid))
+            return out
+        return run_jit(imgs)
+
+    run.raw = run_jit
     return run
+
+
+_register_lru("imgproc.tiles.compiled", _compile_tiled_cached)
 
 
 def compile_tiled(pipe: CompiledPipeline, shape: Sequence[int],

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.specs import paper_spec
 from repro.imgproc import ops as ops_lib
+from repro.obs.caches import register_lru as _register_lru
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,8 @@ def _operator_workload(op: ops_lib.ImageOp) -> Workload:
         if op.n_inputs == 2:
             return jax.jit(jax.vmap(lambda a, b: op.fn(a, b, ax, **kw)))
         return jax.jit(jax.vmap(lambda a: op.fn(a, ax, **kw)))
+
+    _register_lru(f"imgproc.workload.{op.name}", _jitted)
 
     def run(imgs, kind="haloc_axa", backend=None, fast=False,
             strategy=None, **kw):

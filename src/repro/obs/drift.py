@@ -1,0 +1,352 @@
+"""Online quality-drift monitor — the runtime counterpart of
+``repro.imgproc.plan.fused_psnr_gate``.
+
+PR 5 made the Table-1 error metrics of every LUT-compilable
+``(kind, m, k)`` adder config EXACT (closed-form expectations over the
+``2^m x 2^m`` delta table, :mod:`repro.ax.analytics`).  Those budgets
+assume UNIFORM operands; Masadeh et al.'s comparative study (PAPERS.md)
+shows approximate-datapath accuracy is input-distribution-dependent —
+a production stream whose operand distribution drifts (correlated low
+bits, saturated regions, adversarial content) can sit far off the
+predicted quality even though the offline corpus PSNR looked fine.
+
+:class:`DriftMonitor` closes that loop online: it accumulates the
+measured per-ADD mean absolute error per pipeline stage and flags any
+stage whose running mean leaves the predicted band of the budget spec,
+
+    threshold(stage) = MED * band + z * sigma / sqrt(n)
+
+with ``MED``/``sigma`` the exact first/second moments of the budgeted
+``(kind, m, k)`` (:func:`repro.ax.analytics.exact_error_moments`) —
+so a correctly-budgeted uniform stream sits at ratio ~1.0 and a
+mis-budgeted (or drifted) one trips deterministically once
+``min_samples`` adds are seen.
+
+Three feeds, coarsest to finest:
+
+- :meth:`observe_errors`: raw per-add absolute errors you measured.
+- :meth:`observe_operands`: operand pairs that entered an adder — the
+  exact per-add error is one gather from the datapath's compiled delta
+  table (:func:`repro.ax.lut.error_delta_table`).
+- engine capture: with telemetry enabled and a monitor
+  :func:`install`-ed, the host (numpy) engines feed ``add`` operands
+  and ``accumulate``/``filter_chain`` fold errors automatically, with
+  the stage label taken from the innermost open ``stage:*`` span — run
+  a small shadow crop of the stream through a numpy-backend pipeline
+  and every stage reports without touching the jitted fast path.
+
+Stage errors from the fold feeds (``accumulate``/``filter_chain``) are
+normalized by the adds-per-output-element, so everything is compared in
+per-add units against the same MED budget; error cancellation across a
+fold only ever biases the measurement DOWN (under-trips, never false
+alarms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import trace as _trace
+
+#: Per-observation element cap: larger arrays are strided down so a
+#: shadow capture costs O(cap) regardless of crop size.
+MAX_OBS_ELEMENTS = 4096
+
+
+@dataclasses.dataclass
+class _StageAcc:
+    n: int = 0
+    sum_abs: float = 0.0
+    max_abs: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftStatus:
+    """One stage's running verdict against the budget."""
+
+    stage: str
+    n: int                 # adds observed
+    mean_abs: float        # measured per-add mean |error|
+    budget_med: float      # exact MED of the budgeted spec
+    threshold: float       # trip level (band + sampling slack)
+    tripped: bool
+
+    @property
+    def ratio(self) -> float:
+        """measured / budget (inf when the budget is exact-zero)."""
+        if self.budget_med == 0.0:
+            return math.inf if self.mean_abs > 0 else 0.0
+        return self.mean_abs / self.budget_med
+
+
+class DriftMonitor:
+    """Accumulate per-stage mean |error| against a spec's exact budget.
+
+    Args:
+      spec: the BUDGETED adder config (``AdderSpec``) — what the
+        pipeline is believed to run; the PR-5 exact MED/NMED/variance of
+        this spec define the band.
+      band: relative headroom on the exact MED (a stage trips when its
+        measured per-add mean exceeds ``MED * band`` plus sampling
+        slack).  Under uniform operands the measured mean converges to
+        MED exactly, so 1.25 tolerates benign distribution shift while
+        catching a config/drift mismatch of any real magnitude.
+      z: sampling-slack width in exact-sigma units (the same variance
+        the ``--validate`` Monte-Carlo cross-check uses).
+      min_samples: adds a stage must accumulate before it may trip.
+    """
+
+    def __init__(self, spec, band: float = 1.25, z: float = 4.0,
+                 min_samples: int = 1024):
+        from repro.ax.analytics import exact_error_moments
+        self.spec = spec
+        self.band = float(band)
+        self.z = float(z)
+        self.min_samples = int(min_samples)
+        mom = exact_error_moments(spec)
+        self.budget_med = mom.med
+        self.budget_nmed = mom.nmed
+        self.budget_sigma = math.sqrt(mom.var_ed)
+        self._stages: Dict[str, _StageAcc] = {}
+
+    # ------------------------------------------------------------ feeds --
+
+    def observe_errors(self, stage: str, abs_errors,
+                       n_adds: int = 1) -> None:
+        """Raw measured absolute errors for ``stage``; ``n_adds`` is the
+        number of approximate adds each error value folded through (the
+        per-add normalization of the fold feeds)."""
+        e = np.abs(np.asarray(abs_errors, dtype=np.float64)).ravel()
+        if e.size == 0:
+            return
+        acc = self._stages.setdefault(stage, _StageAcc())
+        scale = max(int(n_adds), 1)
+        acc.n += e.size * scale
+        acc.sum_abs += float(e.sum())
+        acc.max_abs = max(acc.max_abs, float(e.max()) / scale)
+
+    def observe_operands(self, stage: str, a, b, spec=None) -> None:
+        """Operand pairs that entered the ACTUAL datapath ``spec``
+        (default: the budgeted spec — i.e. "the config I think I run"):
+        per-add errors are gathered from that spec's exact delta table.
+        Operands are N-bit unsigned containers (low bits are masked by
+        the table index)."""
+        from repro.ax.lut import error_delta_table, lut_index, \
+            lut_supported
+        from repro.ax.registry import get_adder
+        spec = spec if spec is not None else self.spec
+        a = _subsample(np.asarray(a).ravel())
+        b = _subsample(np.asarray(b).ravel())
+        if get_adder(spec.kind).is_exact:
+            self.observe_errors(stage, np.zeros(a.size))
+            return
+        if not lut_supported(spec):
+            return  # no compilable delta table — nothing exact to gather
+        idx = lut_index(a.astype(np.uint64), b.astype(np.uint64), spec)
+        self.observe_errors(stage,
+                            error_delta_table(spec)[np.asarray(idx)])
+
+    # ---------------------------------------------------------- verdicts --
+
+    def threshold(self, n: int) -> float:
+        slack = self.z * self.budget_sigma / math.sqrt(max(n, 1))
+        return self.budget_med * self.band + slack
+
+    def status(self, stage: str) -> DriftStatus:
+        acc = self._stages.get(stage) or _StageAcc()
+        mean = acc.sum_abs / acc.n if acc.n else 0.0
+        thr = self.threshold(acc.n)
+        return DriftStatus(
+            stage=stage, n=acc.n, mean_abs=mean,
+            budget_med=self.budget_med, threshold=thr,
+            tripped=acc.n >= self.min_samples and mean > thr)
+
+    def statuses(self) -> Tuple[DriftStatus, ...]:
+        return tuple(self.status(s) for s in self._stages)
+
+    def drifted(self) -> Tuple[str, ...]:
+        """Stages currently outside their predicted band."""
+        return tuple(st.stage for st in self.statuses() if st.tripped)
+
+    def ok(self) -> bool:
+        return not self.drifted()
+
+    def reset(self) -> None:
+        self._stages.clear()
+
+    def report(self) -> str:
+        """Human-readable per-stage drift table."""
+        head = (f"drift budget {self.spec.short_name}: "
+                f"MED={self.budget_med:.4f} NMED={self.budget_nmed:.3e} "
+                f"band={self.band}x")
+        if not self._stages:
+            return head + "\n(no observations)"
+        width = max(len(s) for s in self._stages)
+        lines = [head, f"{'stage':{width}s} {'n_adds':>10s} "
+                       f"{'mean|e|':>10s} {'ratio':>8s}  verdict"]
+        for st in self.statuses():
+            ratio = "inf" if math.isinf(st.ratio) else f"{st.ratio:.3f}"
+            lines.append(
+                f"{st.stage:{width}s} {st.n:10d} {st.mean_abs:10.4f} "
+                f"{ratio:>8s}  "
+                f"{'DRIFT' if st.tripped else 'ok'}")
+        return "\n".join(lines)
+
+
+# ------------------------------------------------------ engine capture --
+
+#: The installed monitor (one at a time; ``None`` = capture off).
+_MONITOR: Optional[DriftMonitor] = None
+
+
+def install(monitor: DriftMonitor) -> DriftMonitor:
+    """Make ``monitor`` the engine-capture sink (telemetry must also be
+    enabled for the capture hooks to fire)."""
+    global _MONITOR
+    _MONITOR = monitor
+    return monitor
+
+
+def uninstall() -> None:
+    global _MONITOR
+    _MONITOR = None
+
+
+def active_monitor() -> Optional[DriftMonitor]:
+    return _MONITOR
+
+
+class _Installed:
+    def __init__(self, monitor):
+        self.monitor = monitor
+
+    def __enter__(self):
+        install(self.monitor)
+        return self.monitor
+
+    def __exit__(self, *exc):
+        uninstall()
+        return False
+
+
+def installed(monitor: DriftMonitor) -> Iterator[DriftMonitor]:
+    """``with installed(DriftMonitor(spec)): ...`` scoped capture."""
+    return _Installed(monitor)
+
+
+def _subsample(x: np.ndarray) -> np.ndarray:
+    if x.size > MAX_OBS_ELEMENTS:
+        return x[:: x.size // MAX_OBS_ELEMENTS + 1]
+    return x
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """``x`` as a host array if its VALUES exist, else ``None``.
+
+    The capture hooks run inside engine entry points, which the jitted
+    backends also trace: under ``jax.jit`` the operands are abstract
+    tracers with no values, and capture must skip them (returning
+    ``None`` here).  Concrete jax arrays (the numpy-backend shadow
+    pipeline still quantizes through ``jnp``) ARE readable — pulling
+    them to the host is the cost of the shadow capture the caller
+    opted into by installing a monitor."""
+    if isinstance(x, np.ndarray):
+        return x
+    try:
+        import jax
+        if isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer):
+            return np.asarray(x)
+    except (ImportError, TypeError):
+        pass
+    return None
+
+
+def _stage_label() -> str:
+    """The innermost open ``stage:*`` span names the pipeline stage the
+    capture belongs to; otherwise the innermost span, else 'unlabeled'."""
+    stack = _trace.current_stack()
+    for name in reversed(stack):
+        if name.startswith("stage:"):
+            return name[len("stage:"):]
+    return stack[-1] if stack else "unlabeled"
+
+
+def _signed_mod_diff(approx, exact, n_bits: int) -> np.ndarray:
+    """Minimal signed difference of two mod-2^N container values."""
+    mask = (1 << n_bits) - 1
+    d = (approx.astype(np.int64) - exact.astype(np.int64)) & mask
+    half = 1 << (n_bits - 1)
+    return np.where(d >= half, d - (1 << n_bits), d)
+
+
+def capture_add(spec, a, b) -> None:
+    """Engine hook: one elementwise ``add`` on concrete arrays."""
+    mon = _MONITOR
+    if mon is None:
+        return
+    a, b = _concrete(a), _concrete(b)
+    if a is None or b is None:
+        return
+    mon.observe_operands(_stage_label(), a, b, spec=spec)
+
+
+def capture_accumulate(spec, terms, weights, out) -> None:
+    """Engine hook: a K-term weighted fold.  Measures the fold's total
+    error against the exact mod-2^N weighted sum, normalized per add."""
+    mon = _MONITOR
+    if mon is None:
+        return
+    terms, out = _concrete(terms), _concrete(out)
+    if terms is None or out is None:
+        return
+    t = _subsample(terms.reshape(terms.shape[0], -1).T).T
+    o = _subsample(out.ravel())
+    k = t.shape[0]
+    if k < 2 or t.shape[1] != o.size:
+        return
+    ws = tuple(weights) if weights is not None else (1,) * k
+    mask = (1 << spec.n_bits) - 1
+    exact = np.zeros(t.shape[1], dtype=np.uint64)
+    for i, w in enumerate(ws):
+        exact = (exact + t[i].astype(np.uint64)
+                 * np.uint64(w % (1 << spec.n_bits))) & np.uint64(mask)
+    err = np.abs(_signed_mod_diff(o.astype(np.uint64), exact,
+                                  spec.n_bits))
+    mon.observe_errors(_stage_label(), err / (k - 1), n_adds=k - 1)
+
+
+def capture_filter_chain(spec, q, stages, out) -> None:
+    """Engine hook: a chained separable-filter pass.  Compares the whole
+    approximate chain against its exact integer twin (replicate-padded
+    taps, exact weighted sums, the same rounding shifts), normalized by
+    the chain's total adds per output element."""
+    mon = _MONITOR
+    if mon is None:
+        return
+    q, out = _concrete(q), _concrete(out)
+    if q is None or out is None:
+        return
+    n_adds = sum(max(len(st.offsets) - 1, 1) for st in stages)
+    exact = _exact_filter_chain(q, stages)
+    err = np.abs(out.astype(np.int64) - exact)
+    mon.observe_errors(_stage_label(),
+                       _subsample(err.ravel()) / n_adds, n_adds=n_adds)
+
+
+def _exact_filter_chain(q: np.ndarray, stages) -> np.ndarray:
+    """The exact-adder twin of ``Backend.filter_chain`` on signed ints."""
+    x = q.astype(np.int64)
+    for st in stages:
+        n = x.shape[st.axis]
+        acc = np.zeros_like(x)
+        for off, w in zip(st.offsets, st.weights):
+            idx = np.clip(np.arange(n) + off, 0, n - 1)
+            acc = acc + int(w) * np.take(x, idx, axis=st.axis)
+        if st.shift:
+            acc = (acc + (1 << (st.shift - 1))) >> st.shift
+        x = acc
+    return x
