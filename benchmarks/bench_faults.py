@@ -1,0 +1,56 @@
+"""Fault-injection campaign: quality-vs-defect curves and the
+self-healing recovery cell, committed to ``BENCH_faults.json``.
+
+The campaign is fully seeded (synthetic batches, counter-based
+transient flips, the closed-form degradation ladder), so the recorded
+numbers are a deterministic function of the code — exactly what a
+merge-and-guard trajectory wants.  ``quick=True`` (the CI smoke grid)
+keeps the sweep to a handful of cells and runs in seconds on the numpy
+backend; the full grid rides behind the benchmark suite's normal run.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_faults``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+
+def run(quick: bool = True,
+        backend: str = "numpy") -> Tuple[List[str], List[Dict]]:
+    from repro.resilience.harness import recovery_cell, run_campaign
+
+    lines: List[str] = []
+    records: List[Dict] = []
+
+    t0 = time.perf_counter()
+    cells = run_campaign(quick=quick, backend=backend)
+    dt_us = (time.perf_counter() - t0) * 1e6 / max(len(cells), 1)
+    print("\n== Fault-injection campaign (PSNR/SSIM vs defect) ==")
+    print(f"{'fault':26s} {'PSNR dB':>8s} {'SSIM':>7s}")
+    for c in cells:
+        tag = "none" if c.fault is None else c.fault.short_name
+        print(f"{tag:26s} {c.psnr:8.2f} {c.ssim:7.4f}")
+        lines.append(f"faults/{c.workload}/{c.kind}/{tag},{dt_us:.0f},"
+                     f"PSNR={c.psnr:.2f};SSIM={c.ssim:.4f}")
+        records.append(c.record())
+
+    t0 = time.perf_counter()
+    rec = recovery_cell(backend=backend)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    print(f"recovery: {rec['fault']}[{rec['bits']}] "
+          f"{rec['psnr_nofallback']:.2f} dB -> {rec['psnr_fallback']:.2f}"
+          f" dB on {rec['fallback_to']} "
+          f"(+{rec['recovery_db']:.2f} dB, level {rec['degrade_level']})")
+    lines.append(
+        f"faults/recovery/{rec['workload']}/{rec['kind']},{dt_us:.0f},"
+        f"recovery_db={rec['recovery_db']:.2f};"
+        f"fallback={rec['fallback_to']}")
+    records.append(rec)
+    return lines, records
+
+
+if __name__ == "__main__":
+    for ln in run()[0]:
+        print(ln)

@@ -51,7 +51,8 @@ def check(path: str) -> int:
 
 def main(argv) -> int:
     paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json",
-                     "BENCH_table1.json", "BENCH_mac.json"]
+                     "BENCH_table1.json", "BENCH_mac.json",
+                     "BENCH_faults.json"]
     return max((check(p) for p in paths), default=0)
 
 

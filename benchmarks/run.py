@@ -13,6 +13,9 @@ trajectory:
   exact-vs-Monte-Carlo sweep timings/speedups, and the full
   design-space Pareto point cloud (exact error x hw cost per
   (kind, N, m, k)).
+- ``BENCH_faults.json``   — the fault-injection campaign (PSNR/SSIM
+  vs defect kind/bit/rate) and the self-healing recovery cell
+  (``repro.resilience``).
 
 The JSON files are a TRAJECTORY: every run MERGES into the committed
 file instead of overwriting it — records whose identity (all
@@ -44,6 +47,9 @@ METRIC_FIELDS = frozenset({
     # timing-quality and telemetry metrics (repro.obs instrumentation)
     "wall_ms_spread", "jitter_pct", "overhead_pct",
     "p50_ms", "p95_ms", "p99_ms",
+    # fault-injection campaign + self-healing recovery (BENCH_faults)
+    "psnr_nofallback", "psnr_fallback", "recovery_db",
+    "degrade_level", "trips", "batches_degraded",
 })
 
 #: Fields that describe the MACHINE a record was measured on.  They are
@@ -103,9 +109,9 @@ def _dump(path: str, records) -> None:
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import (bench_imgproc, bench_kernels, bench_mac,
-                            fig5_image, fig6_tradeoff, roofline,
-                            table1_error, table1_hw)
+    from benchmarks import (bench_faults, bench_imgproc, bench_kernels,
+                            bench_mac, fig5_image, fig6_tradeoff,
+                            roofline, table1_error, table1_hw)
     lines = []
     lines += table1_hw.run()
     t1_lines, t1_records = table1_error.run(
@@ -128,8 +134,11 @@ def main() -> None:
     lines += img_lines
     kern_lines, kern_records = bench_kernels.run()
     lines += kern_lines
+    flt_lines, flt_records = bench_faults.run(quick=quick)
+    lines += flt_lines
     lines += roofline.run()
     _dump("BENCH_kernels.json", kern_records)
+    _dump("BENCH_faults.json", flt_records)
     _dump("BENCH_imgproc.json", img_records)
     _dump("BENCH_table1.json", t1_records + par_records)
     _dump("BENCH_mac.json", pmul_records + mac_records)

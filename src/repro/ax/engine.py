@@ -41,6 +41,7 @@ from repro.ax.mul import (
 )
 from repro.ax.registry import get_adder
 from repro.core.specs import AdderSpec
+from repro.resilience.faults import FaultSpec, apply_fault, validate_fault
 from repro.numerics.fixed_point import (
     FixedPointFormat,
     container_to_signed,
@@ -69,6 +70,12 @@ class AxEngine:
         engine: ``mul``/``mul_signed`` run the multiplier alone, and
         ``conv2d``/``matmul`` route every product through it (with the
         adder on the accumulations).
+      fault: an injected hardware fault
+        (:class:`repro.resilience.faults.FaultSpec`) applied to every
+        ``add``/``accumulate``/``filter_chain`` output bus, or ``None``
+        for the healthy datapath.  Portable masks — the faulted
+        datapath is bit-identical across backends, same as the healthy
+        one.
     """
 
     spec: AdderSpec
@@ -76,6 +83,7 @@ class AxEngine:
     backend: Backend
     strategy: str = "reference"
     mul_spec: Optional[MulSpec] = None
+    fault: Optional[FaultSpec] = None
 
     @property
     def fast(self) -> bool:
@@ -89,11 +97,15 @@ class AxEngine:
         if _obs._ENABLED:
             with _obs.span("ax:add", kind=self.spec.kind,
                            backend=self.backend.name):
-                out = self.backend.add(a, b, self.spec,
-                                       strategy=self.strategy)
-            _drift.capture_add(self.spec, a, b)
+                out = self._faulted(self.backend.add(
+                    a, b, self.spec, strategy=self.strategy))
+            # A faulted datapath's error is no longer a function of the
+            # spec's delta table, so capture measures the actual output.
+            _drift.capture_add(self.spec, a, b,
+                               out=out if self.fault is not None else None)
             return out
-        return self.backend.add(a, b, self.spec, strategy=self.strategy)
+        return self._faulted(self.backend.add(a, b, self.spec,
+                                              strategy=self.strategy))
 
     def add_full(self, a, b):
         """Full (N+1)-bit unsigned sum (host error analysis; numpy)."""
@@ -106,13 +118,13 @@ class AxEngine:
         K-1 sequential ``add`` calls).  ``weights`` are K static ints,
         multiplied exactly before the K-1 approximate adds."""
         if _obs._ENABLED:
-            out = self.backend.accumulate(terms, self.spec,
-                                          weights=weights,
-                                          strategy=self.strategy)
+            out = self._faulted(self.backend.accumulate(
+                terms, self.spec, weights=weights,
+                strategy=self.strategy))
             _drift.capture_accumulate(self.spec, terms, weights, out)
             return out
-        return self.backend.accumulate(terms, self.spec, weights=weights,
-                                       strategy=self.strategy)
+        return self._faulted(self.backend.accumulate(
+            terms, self.spec, weights=weights, strategy=self.strategy))
 
     def filter_chain(self, q, stages):
         """Chained separable-filter passes on signed containers: each
@@ -123,12 +135,14 @@ class AxEngine:
         ``accumulate`` dispatch per stage elsewhere."""
         self._require_fmt("filter_chain")
         if _obs._ENABLED:
-            out = self.backend.filter_chain(q, self.spec, tuple(stages),
-                                            strategy=self.strategy)
+            out = self._faulted(self.backend.filter_chain(
+                q, self.spec, tuple(stages), strategy=self.strategy),
+                signed=True)
             _drift.capture_filter_chain(self.spec, q, tuple(stages), out)
             return out
-        return self.backend.filter_chain(q, self.spec, tuple(stages),
-                                         strategy=self.strategy)
+        return self._faulted(self.backend.filter_chain(
+            q, self.spec, tuple(stages), strategy=self.strategy),
+            signed=True)
 
     # --------------------------------------------------------- multipliers
 
@@ -261,6 +275,14 @@ class AxEngine:
                     .preferred_strategy(kw.get("spec", self.spec))
         return dataclasses.replace(self, **kw)
 
+    def _faulted(self, out, signed: bool = False):
+        """Apply the installed fault to an adder output bus (identity
+        on healthy engines — one ``is None`` test on the hot path)."""
+        if self.fault is None:
+            return out
+        return apply_fault(out, self.fault, self.spec.n_bits,
+                           signed=signed)
+
     def _require_fmt(self, what: str) -> FixedPointFormat:
         if self.fmt is None:
             raise ValueError(
@@ -332,9 +354,10 @@ def _normalize_mul(mul: Union[MulSpec, str, None]) -> Optional[MulSpec]:
 @functools.lru_cache(maxsize=None)
 def _make_engine_cached(spec: AdderSpec, fmt: Optional[FixedPointFormat],
                         backend: Backend, strategy: str,
-                        mul_spec: Optional[MulSpec]) -> AxEngine:
+                        mul_spec: Optional[MulSpec],
+                        fault: Optional[FaultSpec] = None) -> AxEngine:
     return AxEngine(spec=spec, fmt=fmt, backend=backend, strategy=strategy,
-                    mul_spec=mul_spec)
+                    mul_spec=mul_spec, fault=fault)
 
 
 _register_lru("ax.engine", _make_engine_cached)
@@ -345,7 +368,8 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
                 backend: Union[str, Backend, None] = None,
                 fast: bool = False,
                 strategy: Optional[str] = None,
-                mul: Union[MulSpec, str, None] = None) -> AxEngine:
+                mul: Union[MulSpec, str, None] = None,
+                fault: Optional[FaultSpec] = None) -> AxEngine:
     """Build (or fetch the cached) execution engine.
 
     Args:
@@ -370,6 +394,12 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
         ``None`` for an adder-only engine.  With a multiplier the
         engine exposes ``mul``/``mul_signed``/``conv2d`` and its
         ``matmul`` becomes a full approximate MAC.
+      fault: optional injected hardware fault
+        (:class:`repro.resilience.faults.FaultSpec`) — validated
+        against the adder width (out-of-range bit positions and
+        malformed rates raise ``ValueError`` here instead of silently
+        wrapping in the mod-2^N arithmetic) and applied to every adder
+        output bus.
     """
     strategy = resolve_strategy(strategy, fast)
     if isinstance(spec, MacSpec):
@@ -393,7 +423,9 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
         raise ValueError(
             f"no compilable LUT for {mul_spec.short_name} (n_bits > "
             f"{MAX_MUL_LUT_BITS}); use strategy='reference' or 'fused'")
+    validate_fault(fault, spec.n_bits, what=f"{spec.kind} adder bus")
     resolved = get_backend(backend)
     if strategy == "auto":
         strategy = resolved.preferred_strategy(spec)
-    return _make_engine_cached(spec, fmt, resolved, strategy, mul_spec)
+    return _make_engine_cached(spec, fmt, resolved, strategy, mul_spec,
+                               fault)

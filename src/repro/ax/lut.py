@@ -141,6 +141,18 @@ _register_lru("ax.lut.packed", compile_lut)
 _register_lru("ax.lut.delta", error_delta_table)
 
 
+def compile_lut_nocache(spec: AdderSpec) -> np.ndarray:
+    """Like :func:`compile_lut` but built transiently, NOT cached.
+
+    The fault injector (:mod:`repro.resilience.faults`) corrupts packed
+    tables in place to model stuck-at/bit-flip defects in the LSM
+    logic; building off-cache guarantees the shared
+    :func:`compile_lut` cache — which jit caches and the analytics
+    fast path alias — is never polluted by a corrupted table."""
+    canon = _canonical(spec)
+    return _build_packed(canon)
+
+
 def error_delta_table_nocache(spec: AdderSpec) -> np.ndarray:
     """Like :func:`error_delta_table` but built transiently, NOT cached.
 

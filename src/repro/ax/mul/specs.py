@@ -61,25 +61,20 @@ class MulSpec:
     row_bits: int = 0
 
     def __post_init__(self):
+        from repro.ax.registry import _check_uint_range
         try:
             entry = get_multiplier(self.kind)
         except KeyError:
             raise ValueError(
                 f"unknown multiplier kind {self.kind!r}; registered: "
                 f"{_registered()}") from None
-        if not 2 <= self.n_bits <= MAX_MUL_BITS:
-            raise ValueError(
-                f"n_bits must be in [2, {MAX_MUL_BITS}] (2N+1-bit products "
-                f"must fit 32-bit lanes), got {self.n_bits}")
-        if not 0 <= self.trunc_bits <= self.n_bits - (
-                entry.trunc_margin if entry.uses_trunc else 0):
-            raise ValueError(
-                f"trunc_bits={self.trunc_bits} out of range for "
-                f"{self.kind!r} at n_bits={self.n_bits}")
-        if not 0 <= self.row_bits <= self.n_bits:
-            raise ValueError(
-                f"row_bits={self.row_bits} out of range, got "
-                f"{self.row_bits}")
+        _check_uint_range(self.n_bits, 2, MAX_MUL_BITS, "n_bits",
+                          context="2N+1-bit products must fit 32-bit lanes")
+        _check_uint_range(
+            self.trunc_bits, 0,
+            self.n_bits - (entry.trunc_margin if entry.uses_trunc else 0),
+            "trunc_bits", context=f"{self.kind} at n_bits={self.n_bits}")
+        _check_uint_range(self.row_bits, 0, self.n_bits, "row_bits")
         if self.row_bits and not entry.uses_rows:
             raise ValueError(
                 f"row_bits is only meaningful for row-pruning kinds "

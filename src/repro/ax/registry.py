@@ -75,6 +75,29 @@ _LOCK = threading.Lock()
 _BUILTINS_LOADED = False
 
 
+def _check_uint_range(value, lo: int, hi: int, what: str,
+                      context: str = "") -> int:
+    """Validate an integral knob against an inclusive ``[lo, hi]`` range.
+
+    THE shared range check of the spec layer (adder/multiplier spec
+    validation, fault-injection bit positions): it rejects
+    non-integral values and out-of-range integers with one actionable
+    message instead of letting them silently wrap in the bit
+    arithmetic downstream.  Returns the value as a plain ``int``.
+    Lives here because this module is dependency-free (importable by
+    ``repro.core`` and ``repro.resilience`` alike).
+    """
+    if isinstance(value, bool) or not isinstance(value, (int,)):
+        raise ValueError(
+            f"{what} must be an integer in [{lo}, {hi}]; got "
+            f"{value!r}" + (f" ({context})" if context else ""))
+    if not lo <= value <= hi:
+        raise ValueError(
+            f"{what} must be in [{lo}, {hi}]; got {value}"
+            + (f" ({context})" if context else ""))
+    return int(value)
+
+
 def register_adder(kind: str, *, fast_impl: Optional[Callable] = None,
                    const_section: bool = False, table1: bool = False,
                    order: int = 1000, is_exact: bool = False,

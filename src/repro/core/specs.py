@@ -76,20 +76,15 @@ class AdderSpec:
     const_bits: int = 5
 
     def __post_init__(self):
+        from repro.ax.registry import _check_uint_range
         entry = _entry(self.kind)
         if entry.is_exact:
             return
-        if not (1 <= self.lsm_bits <= self.n_bits):
-            raise ValueError(
-                f"lsm_bits must be in [1, n_bits]; got m={self.lsm_bits}, "
-                f"N={self.n_bits}"
-            )
+        _check_uint_range(self.lsm_bits, 1, self.n_bits, "lsm_bits",
+                          context=f"m of an N={self.n_bits} adder")
         k = self.const_bits if entry.const_section else 0
-        if not (0 <= k <= self.lsm_bits):
-            raise ValueError(
-                f"const_bits must be in [0, lsm_bits]; got k={k}, "
-                f"m={self.lsm_bits}"
-            )
+        _check_uint_range(k, 0, self.lsm_bits, "const_bits",
+                          context=f"k of an m={self.lsm_bits} LSM")
         if self.lsm_bits < entry.min_lsm_bits:
             raise ValueError(
                 f"{self.kind} needs lsm_bits >= {entry.min_lsm_bits}")

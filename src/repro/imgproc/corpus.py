@@ -178,17 +178,33 @@ class StreamResult:
     that window — the number a serving deployment sees, transfer and
     host round-trips included.
 
-    ``batch_seconds`` holds each batch's observed latency (dispatch to
-    drained-on-host, so with ``depth > 1`` in-flight waiting counts —
-    it is the latency a caller of this runner experiences, not pure
-    device time).  The ``p50/p95/p99`` properties summarize it; they
-    are ``nan`` for results predating the field (old pickles) or empty
-    streams."""
+    ``batch_seconds`` holds each accepted batch's observed latency
+    (dispatch to drained-on-host, so with ``depth > 1`` in-flight
+    waiting counts — it is the latency a caller of this runner
+    experiences, not pure device time).  The ``p50/p95/p99`` properties
+    summarize it; they are ``nan`` for results predating the field (old
+    pickles) or empty streams.
 
-    outputs: List[np.ndarray]
+    The hardened-runner fields record what went wrong and what the
+    runner did about it (all empty on a clean run, so results from
+    before the fields existed unpickle/compare unchanged):
+
+    - ``failed``: indices of poisoned batches that raised under
+      ``isolate=True`` — their ``outputs`` slot holds ``None``.
+    - ``retried``: indices that missed their deadline (or were flagged
+      as straggler outliers) at least once and were re-dispatched with
+      exponential backoff.
+    - ``degraded``: indices that ran on a
+      :class:`~repro.resilience.degrade.DegradePolicy` fallback plan
+      (the batch that tripped the policy is re-run and included)."""
+
+    outputs: List[Optional[np.ndarray]]
     seconds: float
     pixels: int
     batch_seconds: Tuple[float, ...] = ()
+    failed: Tuple[int, ...] = ()
+    retried: Tuple[int, ...] = ()
+    degraded: Tuple[int, ...] = ()
 
     @property
     def mpix_per_s(self) -> float:
@@ -207,8 +223,38 @@ class StreamResult:
         return _metrics.quantile(self.batch_seconds, 99.0)
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-not-drained batch."""
+
+    t: float                   # dispatch wall-clock (perf_counter)
+    fut: object                # device future (or host array)
+    index: int                 # position in the input stream
+    batch: object              # kept for re-dispatch on retry
+    attempt: int               # 0 = first dispatch
+
+
+def _settle(fut) -> None:
+    """Block on (or discard) an abandoned future without propagating.
+
+    Teardown helper: a future we will not use must still be settled so
+    the device queue drains and no async error escapes after the runner
+    returns.  Any exception it raises was already accounted for (or is
+    being superseded by the one unwinding the stack)."""
+    try:
+        np.asarray(fut)
+    except Exception:
+        pass
+
+
 def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
-                  depth: int = 2) -> StreamResult:
+                  depth: int = 2,
+                  deadline_s: Optional[float] = None,
+                  max_retries: int = 2,
+                  backoff_s: float = 0.05,
+                  isolate: bool = False,
+                  straggler=None,
+                  degrade=None) -> StreamResult:
     """Async double-buffered executor: dispatch batch ``i+1`` BEFORE
     blocking on batch ``i``'s result.
 
@@ -225,56 +271,175 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
     ``fn`` is any compiled callable returning device (or host) arrays —
     a :class:`~repro.imgproc.plan.CompiledPipeline` or a tiled executor
     from :func:`repro.imgproc.tiles.compile_tiled`.  Outputs are
-    returned in order, materialized on the host.
+    returned in input order, materialized on the host.
+
+    Hardening (all off by default — the plain call is byte-identical to
+    the historical runner):
+
+    - ``deadline_s`` / ``straggler``: per-batch latency SLO.  Lateness
+      is judged by :meth:`repro.runtime.straggler.StragglerMonitor.late`
+      — the repo's one lateness definition — against the explicit
+      deadline and, when a ``StragglerConfig`` is passed, the stream's
+      own median/MAD history.  A late batch is re-dispatched up to
+      ``max_retries`` times with exponential backoff
+      (``backoff_s * 2**attempt``); its index lands in ``retried``.
+    - ``isolate=True``: a batch that raises (dispatch or drain) is a
+      recorded failure — ``None`` in ``outputs``, index in ``failed`` —
+      instead of killing the stream.  With ``isolate=False`` the error
+      re-raises as ``RuntimeError`` naming the failing batch index, and
+      every still-pending future is drained or dropped first: an
+      exception can never leak in-flight work.
+    - ``degrade``: a :class:`~repro.resilience.degrade.DegradePolicy`.
+      Each batch is shown to the policy after dispatch; when the
+      policy's drift monitor trips, the in-flight future is settled and
+      the batch re-runs on the recovered (next-cheapest Pareto) plan,
+      which also serves every subsequent batch.  Affected indices land
+      in ``degraded``.
     """
     if depth < 1:
         raise ValueError(f"depth must be >= 1; got {depth}")
+    if deadline_s is not None and not deadline_s > 0:
+        raise ValueError(f"deadline_s must be > 0; got {deadline_s}")
+    if max_retries < 0:
+        raise ValueError(f"max_retries must be >= 0; got {max_retries}")
+    if backoff_s < 0:
+        raise ValueError(f"backoff_s must be >= 0; got {backoff_s}")
+
+    watch = None
+    if deadline_s is not None or straggler is not None:
+        from repro.runtime.straggler import (StragglerConfig,
+                                             StragglerMonitor)
+        # Deadline-only callers get a monitor whose outlier filter can
+        # never fire (min_samples unreachable): late() then reduces to
+        # the explicit-deadline check, but stays routed through the one
+        # shared lateness definition.
+        cfg = straggler if straggler is not None else StragglerConfig(
+            min_samples=1 << 30)
+        watch = StragglerMonitor(cfg)
+
     pending: collections.deque = collections.deque()
-    outputs: List[np.ndarray] = []
+    results: dict = {}
     latencies: List[float] = []
+    failed: List[int] = []
+    retried: List[int] = []
+    degraded: List[int] = []
     pixels = 0
+    count = 0
     instrumented = _obs._ENABLED
     if instrumented:
         in_flight = _metrics.gauge("stream.batches_in_flight")
         lat_hist = _metrics.histogram("stream.batch_seconds")
         n_batches = _metrics.counter("stream.batches")
         n_pixels = _metrics.counter("stream.pixels")
+        n_failed = _metrics.counter("stream.failed_batches")
+        n_retried = _metrics.counter("stream.retries")
 
-    def drain():
+    # The active callable: degradation swaps it mid-stream, and retry
+    # re-dispatch must pick up the swapped plan, so it lives in a cell.
+    active = [fn]
+
+    def dispatch(batch, index: int, attempt: int) -> None:
+        t = time.perf_counter()
+        if instrumented:
+            with _obs.span("stream:dispatch", batch=index,
+                           attempt=attempt):
+                fut = active[0](batch)
+            in_flight.inc()
+        else:
+            fut = active[0](batch)
+        pending.append(_InFlight(t, fut, index, batch, attempt))
+
+    def drain() -> None:
         # Draining materializes the device future on the host: THE sync
         # point of the stream (np.asarray blocks until ready).
-        td, fut = pending.popleft()
+        ent = pending.popleft()
+        try:
+            if instrumented:
+                with _obs.span("stream:drain", batch=ent.index):
+                    out = np.asarray(ent.fut)
+            else:
+                out = np.asarray(ent.fut)
+        except Exception as exc:
+            if instrumented:
+                in_flight.dec()
+                n_failed.inc()
+            if isolate:
+                failed.append(ent.index)
+                return
+            raise RuntimeError(
+                f"run_streaming: batch {ent.index} failed while draining"
+                f" (attempt {ent.attempt + 1}): {exc}") from exc
         if instrumented:
-            with _obs.span("stream:drain", batch=len(outputs)):
-                outputs.append(np.asarray(fut))
             in_flight.dec()
-        else:
-            outputs.append(np.asarray(fut))
-        lat = time.perf_counter() - td
+        lat = time.perf_counter() - ent.t
+        if (watch is not None and ent.attempt < max_retries
+                and watch.late(ent.index, lat, deadline_s)):
+            if instrumented:
+                n_retried.inc()
+            retried.append(ent.index)
+            time.sleep(backoff_s * (2 ** ent.attempt))
+            dispatch(ent.batch, ent.index, ent.attempt + 1)
+            return
+        results[ent.index] = out
         latencies.append(lat)
         if instrumented:
             lat_hist.record(lat)
 
     t0 = time.perf_counter()
-    for batch in batches:
-        n = int(np.prod(np.shape(batch)))
-        pixels += n
-        if instrumented:
-            with _obs.span("stream:dispatch", batch=len(latencies)
-                           + len(pending)):
-                pending.append((time.perf_counter(), fn(batch)))
-            in_flight.inc()
-            n_batches.inc()
-            n_pixels.inc(n)
-        else:
-            pending.append((time.perf_counter(), fn(batch)))
-        while len(pending) >= depth:
+    try:
+        for i, batch in enumerate(batches):
+            count = i + 1
+            n = int(np.prod(np.shape(batch)))
+            pixels += n
+            if instrumented:
+                n_batches.inc()
+                n_pixels.inc(n)
+            try:
+                dispatch(batch, i, 0)
+            except Exception as exc:
+                if not isolate:
+                    raise RuntimeError(
+                        f"run_streaming: batch {i} failed during "
+                        f"dispatch: {exc}") from exc
+                if instrumented:
+                    n_failed.inc()
+                failed.append(i)
+            else:
+                if degrade is not None:
+                    if degrade.observe(batch):
+                        # Tripped on THIS batch: settle the suspect
+                        # in-flight future and re-run the batch on the
+                        # recovered plan (which serves the rest of the
+                        # stream too).
+                        stale = pending.pop()
+                        _settle(stale.fut)
+                        if instrumented:
+                            in_flight.dec()
+                        active[0] = degrade.run
+                        dispatch(batch, i, stale.attempt)
+                    if degrade.level:
+                        degraded.append(i)
+            while len(pending) >= depth:
+                drain()
+        while pending:
             drain()
-    while pending:
-        drain()
+    finally:
+        # Error-path guarantee: no in-flight future outlives the call.
+        # Whatever unwinds the stack (poisoned batch, caller KeyboardInterrupt),
+        # settle every pending future — drain the drainable, drop the rest.
+        while pending:
+            ent = pending.popleft()
+            _settle(ent.fut)
+            if instrumented:
+                in_flight.dec()
+    outputs: List[Optional[np.ndarray]] = [results.get(i)
+                                           for i in range(count)]
     return StreamResult(outputs=outputs,
                         seconds=time.perf_counter() - t0, pixels=pixels,
-                        batch_seconds=tuple(latencies))
+                        batch_seconds=tuple(latencies),
+                        failed=tuple(failed),
+                        retried=tuple(dict.fromkeys(retried)),
+                        degraded=tuple(degraded))
 
 
 def _psnr_cell(psnr_db: float) -> str:

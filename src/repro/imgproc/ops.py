@@ -53,7 +53,8 @@ _ALPHA_BITS = 6
 def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
                       backend=None, fast: bool = False,
                       n_bits: int = IMAGE_N_BITS,
-                      strategy: Optional[str] = None) -> AxEngine:
+                      strategy: Optional[str] = None,
+                      fault=None) -> AxEngine:
     """Engine for the image datapath.
 
     A bare kind name gets the paper's scaled partition at ``n_bits``
@@ -61,7 +62,9 @@ def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
     fractional split is re-derived per operator, so only the width
     matters here.  ``strategy`` picks the adder evaluation path
     (reference / fused / lut, all bit-identical); ``fast`` is the
-    back-compat alias for ``strategy="fused"``."""
+    back-compat alias for ``strategy="fused"``.  ``fault`` injects a
+    hardware defect (:class:`repro.resilience.faults.FaultSpec`) into
+    every adder output bus — validated against the datapath width."""
     if isinstance(kind, AdderSpec):
         n_bits = kind.n_bits
     if not (2 <= n_bits <= 30):
@@ -71,14 +74,18 @@ def make_image_engine(kind: Union[str, AdderSpec] = "haloc_axa",
             f"spec belongs to the FFT pipeline; the image operators use "
             f"the paper's Fig-4 N=16 instance by default.)")
     return make_engine(kind, fmt=FixedPointFormat(n_bits, 0),
-                       backend=backend, fast=fast, strategy=strategy)
+                       backend=backend, fast=fast, strategy=strategy,
+                       fault=fault)
 
 
 def _with_frac(ax: AxEngine, frac_bits: int) -> AxEngine:
-    """The cached engine with the operator's Q-format split."""
+    """The cached engine with the operator's Q-format split (the
+    injected fault, when present, rides along — each operator's
+    re-derived engine runs the same defective hardware)."""
     return make_engine(ax.spec,
                        fmt=FixedPointFormat(ax.spec.n_bits, frac_bits),
-                       backend=ax.backend, strategy=ax.strategy)
+                       backend=ax.backend, strategy=ax.strategy,
+                       fault=ax.fault)
 
 
 def _q(img, fmt: FixedPointFormat):

@@ -238,22 +238,23 @@ def _fused_chain(stages, ax) -> Callable:
 
 @functools.lru_cache(maxsize=None)
 def _compile_cached(stages, kind, backend_name, strategy, n_bits,
-                    requant) -> CompiledPipeline:
-    with _obs.span("plan:compile", kind=kind, backend=backend_name,
+                    requant, fault=None) -> CompiledPipeline:
+    with _obs.span("plan:compile", kind=str(kind), backend=backend_name,
                    requant=requant,
                    stages=tuple(n for n, _ in stages)) \
             if _obs._ENABLED else _obs._NOOP:
         return _compile_uncached(stages, kind, backend_name, strategy,
-                                 n_bits, requant)
+                                 n_bits, requant, fault)
 
 
 _register_lru("imgproc.plan.compiled", _compile_cached)
 
 
 def _compile_uncached(stages, kind, backend_name, strategy, n_bits,
-                      requant) -> CompiledPipeline:
+                      requant, fault=None) -> CompiledPipeline:
     ax = ops_lib.make_image_engine(kind, backend=backend_name,
-                                   strategy=strategy, n_bits=n_bits)
+                                   strategy=strategy, n_bits=n_bits,
+                                   fault=fault)
     qforms = [ops_lib.get_operator(name).qform for name, _ in stages]
     if requant == "fused":
         missing = [name for (name, _), qf in zip(stages, qforms)
@@ -280,39 +281,50 @@ def _compile_uncached(stages, kind, backend_name, strategy, n_bits,
 
 
 def compile_pipeline(stages: Sequence[StageSpec],
-                     kind: str = "haloc_axa",
+                     kind="haloc_axa",
                      backend: Optional[str] = None,
                      fast: bool = False,
                      strategy: Optional[str] = None,
                      n_bits: int = ops_lib.IMAGE_N_BITS,
-                     requant: str = "stage") -> CompiledPipeline:
+                     requant: str = "stage",
+                     fault=None) -> CompiledPipeline:
     """Compile ``stages`` (operator names, or (name, kwargs) pairs) into
     one callable over a batch of uint8 images.
 
     The result is cached by (stages, kind, backend, strategy, n_bits,
-    requant): repeated requests return the same object and warm calls
-    hit the XLA jit cache.  ``requant="stage"`` is bit-identical to
-    running the stages individually; ``requant="fused"`` chains the raw
-    Q-forms with no intermediate uint8 round-trips (PSNR-gated, see the
-    module docstring)."""
+    requant, fault): repeated requests return the same object and warm
+    calls hit the XLA jit cache.  ``requant="stage"`` is bit-identical
+    to running the stages individually; ``requant="fused"`` chains the
+    raw Q-forms with no intermediate uint8 round-trips (PSNR-gated, see
+    the module docstring).
+
+    ``kind`` is a registered kind name or a full
+    :class:`~repro.core.specs.AdderSpec` — the explicit-spec form is
+    what lets the degradation ladder (:mod:`repro.resilience.degrade`)
+    compile fallback plans at arbitrary Pareto-frontier (m, k) points.
+    ``fault`` injects a hardware defect
+    (:class:`repro.resilience.faults.FaultSpec`) into every adder of
+    the plan; bit positions and rates are validated here (via
+    ``make_engine``) before anything compiles."""
     from repro.ax.backends import resolve_strategy
     strategy = resolve_strategy(strategy, fast)
     check_requant(requant)
     ax = ops_lib.make_image_engine(kind, backend=backend, strategy=strategy,
-                                   n_bits=n_bits)
+                                   n_bits=n_bits, fault=fault)
     # The engine's RESOLVED strategy keys the cache, so "auto" and its
     # concrete spelling share one plan (and one XLA compilation).
     return _compile_cached(_norm_stages(stages), kind, ax.backend.name,
-                           ax.strategy, n_bits, requant)
+                           ax.strategy, ax.spec.n_bits, requant, fault)
 
 
 def run_pipeline(stages: Sequence[StageSpec], imgs, *,
-                 kind: str = "haloc_axa", backend: Optional[str] = None,
+                 kind="haloc_axa", backend: Optional[str] = None,
                  fast: bool = False, strategy: Optional[str] = None,
-                 requant: str = "stage"):
+                 requant: str = "stage", fault=None):
     """One-shot convenience: compile (or fetch) the plan and run it."""
     pipe = compile_pipeline(stages, kind=kind, backend=backend, fast=fast,
-                            strategy=strategy, requant=requant)
+                            strategy=strategy, requant=requant,
+                            fault=fault)
     if pipe.engine.backend.name == "numpy":
         return pipe(imgs)
     return np.asarray(pipe(jnp.asarray(np.asarray(imgs))))

@@ -283,13 +283,31 @@ def _signed_mod_diff(approx, exact, n_bits: int) -> np.ndarray:
     return np.where(d >= half, d - (1 << n_bits), d)
 
 
-def capture_add(spec, a, b) -> None:
-    """Engine hook: one elementwise ``add`` on concrete arrays."""
+def capture_add(spec, a, b, out=None) -> None:
+    """Engine hook: one elementwise ``add`` on concrete arrays.
+
+    Without ``out`` the per-add error is gathered from the spec's exact
+    delta table (the healthy datapath is a pure function of the low
+    operand bits).  With ``out`` — the fault-injected engines, whose
+    error is NOT a function of the spec anymore — the measured output
+    is compared against the exact mod-2^N sum directly."""
     mon = _MONITOR
     if mon is None:
         return
     a, b = _concrete(a), _concrete(b)
     if a is None or b is None:
+        return
+    if out is not None:
+        o = _concrete(out)
+        if o is None or a.shape != b.shape or a.shape != o.shape:
+            return
+        av = _subsample(a.ravel()).astype(np.uint64)
+        bv = _subsample(b.ravel()).astype(np.uint64)
+        ov = _subsample(o.ravel()).astype(np.uint64)
+        exact = (av + bv) & np.uint64((1 << spec.n_bits) - 1)
+        mon.observe_errors(
+            _stage_label(),
+            np.abs(_signed_mod_diff(ov, exact, spec.n_bits)))
         return
     mon.observe_operands(_stage_label(), a, b, spec=spec)
 

@@ -1,0 +1,46 @@
+"""``repro.resilience`` — fault injection, self-healing degradation,
+and campaign harness for the approximate-adder serving stack.
+
+Three layers on top of ax -> plan -> tiles -> streaming:
+
+- :mod:`repro.resilience.faults`: :class:`FaultSpec` + injectors
+  (compiled-LUT corruption via the non-cached build, portable
+  operator-level masks, seeded counter-based transient flips).
+- :mod:`repro.resilience.degrade`: :class:`DegradePolicy` — subscribes
+  to the installed :class:`~repro.obs.drift.DriftMonitor` and walks the
+  PR-5 exact Pareto frontier toward the exact adder when a stage trips.
+- :mod:`repro.resilience.harness`: the fault-campaign sweep producing
+  the PSNR/SSIM-vs-fault-rate curves committed to ``BENCH_faults.json``.
+
+Attribute access is lazy (PEP 562): ``repro.ax.engine`` imports
+``repro.resilience.faults`` (a leaf module), while ``degrade`` and
+``harness`` import the imgproc stack on top of the engine — eager
+re-exports here would close that cycle.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "FaultSpec": "faults", "FAULT_KINDS": "faults",
+    "apply_fault": "faults", "corrupt_lut": "faults",
+    "faulted_delta_table": "faults", "faulted_mean_abs_error": "faults",
+    "transient_flip_mask": "faults", "validate_fault": "faults",
+    "DegradePolicy": "degrade", "pareto_ladder": "degrade",
+    "CampaignCell": "harness", "run_campaign": "harness",
+    "recovery_cell": "harness", "default_campaign_faults": "harness",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,273 @@
+"""Hardware fault injection for the approximate-adder datapath.
+
+Gate-level approximate-adder work (Balasubramanian & Maskell's static
+approximate adders, the Masadeh surveys in PAPERS.md) treats stuck-at
+and transient bit-flip defects as first-class: an approximate LSM is
+exactly the block a yield-optimized die would ship with marginal cells.
+This module injects those defects into the repro's datapath at three
+layers, all driven by one :class:`FaultSpec`:
+
+1. **Compiled-table corruption** (:func:`corrupt_lut`,
+   :func:`faulted_delta_table`): deterministic corruption of a packed
+   low-part LUT, built through the NON-cached variant
+   (:func:`repro.ax.lut.compile_lut_nocache`) so the shared
+   :func:`~repro.ax.lut.compile_lut` cache is never polluted.  The
+   faulted delta table makes the faulted config's error analytics
+   exact, the same way PR 5 made the healthy Table 1 exact.
+2. **Operator-level masks** (:func:`apply_fault`): AND/OR/XOR fault
+   masks written with portable operators only, so ONE implementation
+   runs identically on numpy uint64 containers, jax uint32/int32
+   lanes, and traced values — the engine applies them to every
+   ``add``/``accumulate``/``filter_chain`` output when a fault is
+   installed (``make_engine(..., fault=...)``).
+3. **Seeded counter-based transient flips**
+   (:func:`transient_flip_mask`): a splitmix-style uint32 hash of
+   ``(element index, seed, bit)`` decides each flip, so the flip
+   pattern is a pure function of the spec — reproducible campaigns,
+   bit-identical across backends, and usable inside Pallas kernel
+   bodies (pure ``jnp`` uint32 ops, no RNG state).
+
+Cross-backend bit-identity of the FAULTED datapath is a hard contract,
+same as the healthy one: the element index feeding the flip hash is
+taken over the trailing two (image) axes only, so the vmapped jax
+pipeline (which sees per-image ``(H, W)`` blocks) and the whole-batch
+numpy pipeline (which sees ``(B, H, W)``) derive identical masks.
+``tests/test_resilience.py`` sweeps the equality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.ax.lut import (
+    _delta_from_packed,
+    compile_lut_nocache,
+)
+from repro.ax.registry import _check_uint_range
+from repro.core.specs import AdderSpec
+
+#: Legal fault models.  ``stuck_at_0``/``stuck_at_1`` are permanent
+#: (every targeted bit forced on every operation); ``bit_flip`` is
+#: transient (each (element, bit) site flips with probability ``rate``,
+#: decided by the counter hash).
+FAULT_KINDS = ("stuck_at_0", "stuck_at_1", "bit_flip")
+
+_GOLDEN_GAMMA = 0x9E3779B9  # splitmix odd increment
+_MIX1, _MIX2 = 0x21F0AAAD, 0x735A2D97
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injected hardware fault.
+
+    Attributes:
+      kind: one of :data:`FAULT_KINDS`.
+      bits: targeted output-bus bit positions (validated against the
+        datapath width at every injection entry point).
+      rate: per-(element, bit) flip probability for ``bit_flip``;
+        ignored by the permanent stuck-at kinds.
+      seed: the counter-hash key for transient flips (varying the seed
+        re-rolls the flip sites; stuck-at faults ignore it).
+    """
+
+    kind: str
+    bits: Tuple[int, ...]
+    rate: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of "
+                             f"{FAULT_KINDS}")
+        bits = tuple(self.bits) if not isinstance(self.bits, int) \
+            else (self.bits,)
+        object.__setattr__(self, "bits", bits)
+        if not bits:
+            raise ValueError("a FaultSpec needs at least one target bit")
+        for b in bits:
+            _check_uint_range(b, 0, 63, "fault bit position")
+        if len(set(bits)) != len(bits):
+            raise ValueError(f"duplicate fault bit positions: {bits}")
+        rate = float(self.rate)
+        if not 0.0 < rate <= 1.0 or rate != rate:
+            raise ValueError(
+                f"fault rate must be in (0, 1]; got {self.rate!r} "
+                f"(negative or zero rates inject nothing — drop the "
+                f"FaultSpec instead)")
+        object.__setattr__(self, "rate", rate)
+        _check_uint_range(self.seed, 0, (1 << 32) - 1, "fault seed")
+
+    @property
+    def mask(self) -> int:
+        """OR of the targeted bit positions."""
+        return functools.reduce(lambda m, b: m | (1 << b), self.bits, 0)
+
+    @property
+    def short_name(self) -> str:
+        tag = {"stuck_at_0": "sa0", "stuck_at_1": "sa1",
+               "bit_flip": "flip"}[self.kind]
+        bits = ",".join(str(b) for b in self.bits)
+        if self.kind == "bit_flip":
+            return f"{tag}[{bits}]r{self.rate:g}s{self.seed}"
+        return f"{tag}[{bits}]"
+
+
+def validate_fault(fault: Optional["FaultSpec"], n_bits: int,
+                   what: str = "datapath") -> Optional["FaultSpec"]:
+    """Entry-point validation: every targeted bit must lie inside the
+    ``n_bits``-wide output bus (out-of-range positions would silently
+    vanish in the mod-2^N arithmetic instead of injecting)."""
+    if fault is None:
+        return None
+    if not isinstance(fault, FaultSpec):
+        raise ValueError(f"fault must be a FaultSpec or None; got "
+                         f"{type(fault).__name__}")
+    for b in fault.bits:
+        _check_uint_range(b, 0, n_bits - 1, "fault bit position",
+                          context=f"N={n_bits} {what}")
+    return fault
+
+
+# --------------------------------------------------- transient flips --
+
+def _splitmix32(x):
+    """Portable splitmix-style avalanche on uint32 values (numpy or jnp
+    arrays; plain ``* ^ >>`` only, so it also runs inside Pallas kernel
+    bodies)."""
+    one = x.dtype.type
+    x = x ^ (x >> one(16))
+    x = x * one(_MIX1)
+    x = x ^ (x >> one(15))
+    x = x * one(_MIX2)
+    x = x ^ (x >> one(15))
+    return x
+
+
+def transient_flip_mask(idx, fault: FaultSpec):
+    """uint32 XOR mask per element counter ``idx`` (uint32 array).
+
+    Counter-based: flip bit ``b`` of element ``i`` iff
+    ``hash(i, seed, b) < rate * 2^32``.  A pure function of
+    ``(idx, fault)`` — no RNG state — so the same spec produces the
+    same flips on every backend, every run, and inside Pallas kernels
+    (the hash is :func:`_splitmix32` on uint32 lanes).
+    """
+    xp = np if isinstance(idx, np.ndarray) else _jnp()
+    idx = idx.astype(xp.uint32)
+    u32 = idx.dtype.type
+    # rate = 1.0 maps to threshold 2^32 - 1: P(flip) = 1 - 2^-32, the
+    # closest a 32-bit comparison can get to certainty.
+    thresh = u32(min(int(fault.rate * (1 << 32)), (1 << 32) - 1))
+    mask = xp.zeros_like(idx)
+    for b in fault.bits:
+        key = u32(((fault.seed * 2 + 1) * _GOLDEN_GAMMA + b * _MIX1)
+                  & 0xFFFFFFFF)
+        h = _splitmix32(idx * u32(_GOLDEN_GAMMA) ^ key)
+        mask = mask | xp.where(h < thresh, u32(1 << b), u32(0))
+    return mask
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def _site_index(shape, xp):
+    """The flip-site counter for an output of ``shape``: positions over
+    the trailing two (image) axes, broadcast across leading batch dims —
+    a fixed spatial hardware mapping, and the property that makes the
+    whole-batch numpy pipeline and the vmapped jax pipeline (which sees
+    per-image blocks) agree bit-for-bit."""
+    trail = shape[-2:] if len(shape) >= 2 else shape
+    n = 1
+    for s in trail:
+        n *= int(s)
+    return xp.arange(n, dtype=xp.uint32).reshape(trail)
+
+
+# ------------------------------------------------ operator-level mask --
+
+def apply_fault(x, fault: FaultSpec, n_bits: int, signed: bool = False):
+    """Inject ``fault`` into the N-bit output bus values ``x``.
+
+    Portable operators only (``& | ^ >> where``): ``x`` may be a numpy
+    uint64 container array, a jax uint32/int32 array, or a jit tracer —
+    the faulted datapath stays bit-identical across backends exactly
+    like the healthy one.
+
+    ``signed=True`` treats ``x`` as two's-complement N-bit containers
+    held in a wider signed dtype (the ``filter_chain`` Q-domain): the
+    value is reduced to its N low bits, faulted, and sign-extended
+    back.
+    """
+    xp = np if isinstance(x, np.ndarray) else _jnp()
+    t = x.dtype.type
+    full = t((1 << n_bits) - 1)
+    u = (x & full) if signed else x
+    if fault.kind == "stuck_at_1":
+        u = u | t(fault.mask)
+    elif fault.kind == "stuck_at_0":
+        u = u & t(((1 << n_bits) - 1) ^ fault.mask)
+    else:  # bit_flip
+        flips = transient_flip_mask(_site_index(x.shape, xp), fault)
+        u = u ^ flips.astype(x.dtype)
+    if signed:
+        sign = t(1 << (n_bits - 1))
+        u = u - ((u & sign) << t(1))
+    elif fault.kind == "stuck_at_1" and n_bits < 8 * x.dtype.itemsize:
+        u = u & full  # targeted bits are in range, but keep the contract
+    return u
+
+
+# ---------------------------------------------------- LUT corruption --
+
+def corrupt_lut(spec: AdderSpec, fault: FaultSpec) -> np.ndarray:
+    """The packed low-part table of ``spec`` with ``fault`` burned in.
+
+    Deterministic corruption of the compiled-table layer: every entry's
+    low ``m`` sum bits (and, if targeted, the speculated-carry bit at
+    position ``m``) pass through the fault masks; for ``bit_flip`` the
+    table index is the counter, so the corruption is a frozen sample of
+    the transient fault — the defect a faulty SRAM macro would hold.
+
+    Built through :func:`repro.ax.lut.compile_lut_nocache`: the shared
+    ``compile_lut`` cache never sees a corrupted table.
+    """
+    m = spec.lsm_bits
+    for b in fault.bits:
+        _check_uint_range(b, 0, m, "fault bit position",
+                          context=f"packed LUT entries carry m+1="
+                                  f"{m + 1} bits (low sum | carry)")
+    table = compile_lut_nocache(spec).copy()
+    width = m + 1
+    if fault.kind == "bit_flip":
+        idx = np.arange(table.size, dtype=np.uint32)
+        table ^= transient_flip_mask(idx, fault).astype(np.uint16)
+    elif fault.kind == "stuck_at_1":
+        table |= np.uint16(fault.mask)
+    else:
+        table &= np.uint16(((1 << width) - 1) ^ fault.mask)
+    table.flags.writeable = False
+    return table
+
+
+def faulted_delta_table(spec: AdderSpec, fault: FaultSpec) -> np.ndarray:
+    """Signed full-sum error of the FAULTED datapath per low-bit pair —
+    the corrupted twin of :func:`repro.ax.lut.error_delta_table`, and
+    the exact error model the campaign harness predicts PSNR collapse
+    from (fault bits above ``lsm_bits`` live in the exact MSM and are
+    not representable in a low-part table)."""
+    return _delta_from_packed(corrupt_lut(spec, fault), spec.lsm_bits)
+
+
+def faulted_mean_abs_error(spec: AdderSpec, fault: FaultSpec) -> float:
+    """Exact per-add mean |error| of the faulted config under uniform
+    operands — the quantity :class:`repro.obs.drift.DriftMonitor`
+    compares against the healthy budget, so
+    ``faulted_mean_abs_error > monitor.threshold`` predicts the trip."""
+    return float(np.mean(np.abs(
+        faulted_delta_table(spec, fault).astype(np.float64))))

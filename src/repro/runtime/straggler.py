@@ -4,6 +4,13 @@ At fleet scale the common mitigation stack is (a) detect the slow worker,
 (b) alert/evict, (c) keep the optimizer state intact via elastic restart.
 This module implements (a) host-side with a median/MAD filter and exposes
 a callback hook for (b); (c) is runtime/elastic.py + checkpoint restore.
+
+:meth:`StragglerMonitor.late` is the single source of truth for "this
+work item is late" across the repo: the training loop's per-step flag
+and the streaming executor's per-batch deadline path
+(:func:`repro.imgproc.corpus.run_streaming`) both route through it —
+an explicit deadline when the caller has an SLO, the median/MAD outlier
+filter when it only has the stream's own history.
 """
 
 from __future__ import annotations
@@ -42,3 +49,16 @@ class StragglerMonitor:
                 self.on_flag(step, dt)
             return True
         return False
+
+    def late(self, step: int, dt: float,
+             deadline: Optional[float] = None) -> bool:
+        """Deadline-or-outlier lateness verdict for one work item.
+
+        Records ``dt`` into the trailing window either way.  The item
+        is late when it exceeds an explicit ``deadline`` (the caller's
+        SLO) OR when the median/MAD filter flags it as an outlier
+        against the stream's own recent history — the one definition
+        the streaming executor's retry path and the training loop's
+        straggler alerts share."""
+        flagged = self.record(step, dt)
+        return flagged or (deadline is not None and dt > deadline)

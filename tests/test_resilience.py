@@ -1,0 +1,427 @@
+"""repro.resilience: fault injection, hardened streaming, self-healing.
+
+Acceptance (PR 8): a seeded stuck-at-1 campaign on the three-stage
+pipeline where (a) the faulted datapath is bit-identical across
+numpy/jax/pallas, (b) the drift monitor trips within its sample
+budget, (c) the degradation ladder recovers >= 5 dB PSNR versus
+serving the fault unmitigated, and (d) a poisoned batch leaves zero
+leaked in-flight futures.  Long campaigns ride the ``slow`` marker.
+"""
+
+import collections
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import obs
+from repro.ax.lut import compile_lut, error_delta_table
+from repro.core.specs import AdderSpec
+from repro.imgproc.corpus import run_streaming, synthetic_batch
+from repro.imgproc.plan import PIPELINES, compile_pipeline, run_pipeline
+from repro.resilience.faults import (FaultSpec, apply_fault, corrupt_lut,
+                                     faulted_delta_table,
+                                     faulted_mean_abs_error,
+                                     transient_flip_mask, validate_fault)
+
+PIPE = PIPELINES["pipe_blur_sharpen_down"]
+SPEC = AdderSpec("haloc_axa", 16, lsm_bits=8, const_bits=4)
+
+
+@pytest.fixture()
+def fresh_obs():
+    obs.reset_all()
+    obs.enable()
+    yield
+    obs.disable()
+    obs.reset_all()
+
+
+# ----------------------------------------------------- FaultSpec API --
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("stuck_high", bits=(1,))
+    with pytest.raises(ValueError, match="at least one target bit"):
+        FaultSpec("stuck_at_1", bits=())
+    with pytest.raises(ValueError, match="duplicate fault bit"):
+        FaultSpec("stuck_at_1", bits=(3, 3))
+    with pytest.raises(ValueError, match="fault bit position"):
+        FaultSpec("stuck_at_1", bits=(64,))
+    with pytest.raises(ValueError, match="rate must be in"):
+        FaultSpec("bit_flip", bits=(1,), rate=0.0)
+    with pytest.raises(ValueError, match="rate must be in"):
+        FaultSpec("bit_flip", bits=(1,), rate=1.5)
+    with pytest.raises(ValueError, match="fault seed"):
+        FaultSpec("bit_flip", bits=(1,), seed=-1)
+    # Scalar bit positions are coerced to a tuple.
+    assert FaultSpec("stuck_at_1", bits=5).bits == (5,)
+    assert FaultSpec("stuck_at_1", bits=(1, 4)).mask == 0b10010
+
+
+def test_validate_fault_checks_bus_width():
+    f = FaultSpec("stuck_at_1", bits=(40,))
+    with pytest.raises(ValueError, match=r"N=16"):
+        validate_fault(f, 16)
+    assert validate_fault(f, 64) is f
+    assert validate_fault(None, 16) is None
+    with pytest.raises(ValueError, match="FaultSpec or None"):
+        validate_fault("stuck_at_1", 16)
+
+
+def test_fault_entry_point_validation_at_compile():
+    """Input validation at the plan/engine fault entry points: a bit
+    outside the 16-bit image bus is rejected before anything compiles."""
+    from repro.ax import make_engine
+    with pytest.raises(ValueError, match="fault bit position"):
+        compile_pipeline(PIPE, kind="haloc_axa", backend="numpy",
+                         fault=FaultSpec("stuck_at_1", bits=(40,)))
+    with pytest.raises(ValueError, match="fault bit position"):
+        make_engine(SPEC, backend="numpy",
+                    fault=FaultSpec("stuck_at_0", bits=(16,)))
+
+
+# ------------------------------------------- cross-backend identity --
+
+@pytest.mark.parametrize("fault", [
+    FaultSpec("stuck_at_1", bits=(11,)),
+    FaultSpec("stuck_at_0", bits=(3, 11)),
+    FaultSpec("bit_flip", bits=(4, 11), rate=0.25, seed=3),
+], ids=lambda f: f.short_name)
+def test_apply_fault_numpy_jax_bit_identity(fault):
+    rng = np.random.default_rng(0)
+    x64 = rng.integers(0, 1 << 16, 256, dtype=np.uint64)
+    out_np = np.asarray(apply_fault(x64, fault, 16))
+    out_jx = np.asarray(apply_fault(jnp.asarray(x64, jnp.uint32),
+                                    fault, 16))
+    np.testing.assert_array_equal(out_np.astype(np.uint32), out_jx)
+
+
+def test_apply_fault_signed_sign_extension():
+    q = np.array([-5, -1, 0, 1, 2000, -2000], dtype=np.int64)
+    fault = FaultSpec("stuck_at_1", bits=(15,))
+    out = apply_fault(q, fault, 16, signed=True)
+    # Forcing the sign bit makes every value negative, still a valid
+    # 16-bit two's-complement container.
+    assert (out < 0).all()
+    assert (out >= -(1 << 15)).all()
+    out_jx = np.asarray(apply_fault(jnp.asarray(q, jnp.int32), fault, 16,
+                                    signed=True))
+    np.testing.assert_array_equal(out.astype(np.int32), out_jx)
+
+
+@pytest.mark.parametrize("fault", [
+    FaultSpec("stuck_at_1", bits=(11,), seed=0),
+    FaultSpec("bit_flip", bits=(4, 11), rate=0.25, seed=3),
+], ids=lambda f: f.short_name)
+def test_faulted_pipeline_cross_backend_bit_identity(fault):
+    """Acceptance: the FAULTED blur->sharpen->downsample datapath is
+    bit-identical across numpy uint64 containers, jax int32 lanes, and
+    the Pallas tile kernels — same contract as the healthy path."""
+    batch = synthetic_batch(2, 32, seed=1)
+    outs = {b: np.asarray(run_pipeline(PIPE, batch, kind="haloc_axa",
+                                       backend=b, fault=fault))
+            for b in ("numpy", "jax", "pallas")}
+    np.testing.assert_array_equal(outs["numpy"], outs["jax"])
+    np.testing.assert_array_equal(outs["numpy"], outs["pallas"])
+    # And the defect actually bites: the faulted output differs from
+    # the healthy one.
+    healthy = np.asarray(run_pipeline(PIPE, batch, kind="haloc_axa",
+                                      backend="numpy"))
+    assert not np.array_equal(outs["numpy"], healthy)
+
+
+def test_transient_flip_mask_inside_pallas_kernel():
+    """The counter-based flip hash runs inside a Pallas kernel body and
+    reproduces the host mask bit for bit."""
+    fault = FaultSpec("bit_flip", bits=(2, 9), rate=0.5, seed=11)
+    shape = (8, 128)
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        xu = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        idx = jax.lax.broadcasted_iota(
+            jnp.uint32, shape, 0) * jnp.uint32(shape[1]) + \
+            jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+        o_ref[...] = jax.lax.bitcast_convert_type(
+            xu ^ transient_flip_mask(idx, fault), jnp.int32)
+
+    x = np.arange(shape[0] * shape[1], dtype=np.int32).reshape(shape)
+    out = pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(shape, jnp.int32),
+        interpret=True)(jnp.asarray(x))
+    idx = np.arange(x.size, dtype=np.uint32).reshape(shape)
+    want = x.view(np.uint32) ^ transient_flip_mask(idx, fault)
+    np.testing.assert_array_equal(np.asarray(out).view(np.uint32), want)
+
+
+# ------------------------------------------------- LUT-layer faults --
+
+def test_corrupt_lut_never_pollutes_shared_cache():
+    before = compile_lut(SPEC)
+    bad = corrupt_lut(SPEC, FaultSpec("stuck_at_1", bits=(3,)))
+    after = compile_lut(SPEC)
+    assert after is before  # same cached object, untouched
+    np.testing.assert_array_equal(bad, before | np.uint16(1 << 3))
+    assert not bad.flags.writeable
+    with pytest.raises(ValueError, match="packed LUT entries"):
+        # Bits above the m+1-wide packed entry are not representable.
+        corrupt_lut(SPEC, FaultSpec("stuck_at_1", bits=(12,)))
+
+
+def test_faulted_delta_table_predicts_drift_trip():
+    """The corrupted table's exact mean |error| exceeds the healthy
+    drift threshold — the closed-form prediction that the monitor MUST
+    trip on this defect (within sampling slack)."""
+    from repro.obs.drift import DriftMonitor
+    fault = FaultSpec("stuck_at_1", bits=(7,))
+    healthy = error_delta_table(SPEC)
+    faulted = faulted_delta_table(SPEC, fault)
+    assert faulted.shape == healthy.shape
+    assert not np.array_equal(faulted, healthy)
+    mon = DriftMonitor(SPEC)
+    assert faulted_mean_abs_error(SPEC, fault) > mon.threshold(10 ** 6)
+
+
+# ---------------------------------------------- hardened streaming --
+
+class _Fut:
+    """A future-like handle that records whether it was ever settled."""
+
+    def __init__(self, arr, raise_on_drain=False):
+        self.arr = np.asarray(arr)
+        self.raise_on_drain = raise_on_drain
+        self.settled = False
+
+    def __array__(self, dtype=None, copy=None):
+        self.settled = True
+        if self.raise_on_drain:
+            raise RuntimeError("device poisoned")
+        return self.arr
+
+
+def _poisoned_stream(n=6, bad=2):
+    futs = []
+
+    def fn(batch):
+        fut = _Fut(batch, raise_on_drain=int(batch[0, 0, 0]) == bad)
+        futs.append(fut)
+        return fut
+
+    batches = []
+    for i in range(n):
+        b = np.zeros((1, 8, 8), np.uint8)
+        b[0, 0, 0] = i
+        batches.append(b)
+    return fn, batches, futs
+
+
+def test_poisoned_batch_leaves_no_pending_futures(fresh_obs):
+    """Satellite 1 + acceptance: a mid-stream raise re-raises with the
+    failing batch index AND every dispatched future is settled (drained
+    or dropped) before the exception escapes — zero leaks, gauge at 0."""
+    fn, batches, futs = _poisoned_stream(n=6, bad=2)
+    with pytest.raises(RuntimeError, match=r"batch 2"):
+        run_streaming(fn, batches, depth=3)
+    assert futs and all(f.settled for f in futs)
+    snap = obs.metrics_snapshot()
+    assert snap["gauges"]["stream.batches_in_flight"]["value"] == 0
+    assert snap["counters"]["stream.failed_batches"] == 1
+
+
+def test_dispatch_failure_names_batch_index():
+    def fn(batch):
+        if int(batch[0, 0, 0]) == 1:
+            raise ValueError("compile exploded")
+        return batch
+
+    _, batches, _ = _poisoned_stream(n=3)
+    with pytest.raises(RuntimeError, match=r"batch 1 failed during"):
+        run_streaming(fn, batches, depth=2)
+
+
+@pytest.mark.parametrize("depth", [1, 4])
+def test_isolate_records_failure_and_stream_survives(depth):
+    fn, batches, futs = _poisoned_stream(n=6, bad=2)
+    r = run_streaming(fn, batches, depth=depth, isolate=True)
+    assert r.failed == (2,)
+    assert r.outputs[2] is None
+    for i in (0, 1, 3, 4, 5):
+        np.testing.assert_array_equal(r.outputs[i], batches[i])
+    assert all(f.settled for f in futs)
+    assert len(r.batch_seconds) == 5  # only accepted batches time in
+
+
+def test_isolate_depth_invariance():
+    """depth=1 (blocking) and depth=4 (pipelined) agree on outputs AND
+    on which batches failed."""
+    runs = []
+    for depth in (1, 4):
+        fn, batches, _ = _poisoned_stream(n=6, bad=3)
+        runs.append(run_streaming(fn, batches, depth=depth, isolate=True))
+    a, b = runs
+    assert a.failed == b.failed == (3,)
+    assert len(a.outputs) == len(b.outputs)
+    for x, y in zip(a.outputs, b.outputs):
+        if x is None:
+            assert y is None
+        else:
+            np.testing.assert_array_equal(x, y)
+
+
+def test_deadline_retry_with_backoff():
+    """A batch that blows its deadline re-dispatches (bounded, with
+    backoff) and the stream still returns every output in order."""
+    calls = collections.Counter()
+
+    def fn(batch):
+        i = int(batch[0, 0, 0])
+        calls[i] += 1
+        if i == 1 and calls[i] == 1:
+            time.sleep(0.05)
+        return batch
+
+    # depth=1 so each batch's measured latency is its own fn time (at
+    # depth>1 a slow neighbor's dispatch counts into in-flight waiting
+    # and would legitimately flag other batches too).
+    _, batches, _ = _poisoned_stream(n=4)
+    r = run_streaming(fn, batches, depth=1, deadline_s=0.02,
+                      max_retries=2, backoff_s=0.0)
+    assert r.retried == (1,)
+    assert r.failed == ()
+    assert calls[1] == 2 and calls[0] == 1
+    for i in range(4):
+        np.testing.assert_array_equal(r.outputs[i], batches[i])
+
+
+def test_run_streaming_rejects_bad_knobs():
+    batches = [np.zeros((1, 4, 4), np.uint8)]
+    with pytest.raises(ValueError, match="depth"):
+        run_streaming(lambda b: b, batches, depth=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        run_streaming(lambda b: b, batches, deadline_s=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        run_streaming(lambda b: b, batches, max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_s"):
+        run_streaming(lambda b: b, batches, backoff_s=-0.1)
+
+
+def test_straggler_late_is_single_source_of_truth():
+    from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+    mon = StragglerMonitor(StragglerConfig(min_samples=4))
+    for i in range(6):
+        assert not mon.late(i, 0.010)
+    # Outlier against its own history, no explicit deadline needed.
+    assert mon.late(6, 0.200)
+    # Explicit deadline verdict, independent of the history filter.
+    assert mon.late(7, 0.012, deadline=0.011)
+    assert not mon.late(8, 0.010, deadline=0.011)
+
+
+# ------------------------------------------- self-healing degrade --
+
+def test_pareto_ladder_monotone_and_ends_exact():
+    from repro.ax.analytics import exact_error_metrics
+    from repro.ax.registry import get_adder
+    from repro.core.hwcost import switching_energy_fj
+    from repro.resilience.degrade import pareto_ladder
+    ladder = pareto_ladder(SPEC)
+    assert ladder
+    own = exact_error_metrics(SPEC, cache_tables=False).nmed
+    nmeds = [exact_error_metrics(s, cache_tables=False).nmed
+             for s in ladder]
+    energies = [switching_energy_fj(s) for s in ladder]
+    assert all(n < own for n in nmeds)
+    assert nmeds == sorted(nmeds, reverse=True)       # accuracy improves
+    assert energies == sorted(energies)               # energy climbs
+    assert get_adder(ladder[-1].kind).is_exact        # ends exact
+    assert nmeds[-1] == 0.0
+
+
+def test_degrade_policy_requires_telemetry():
+    from repro.resilience.degrade import DegradePolicy
+    obs.disable()
+    pipe = compile_pipeline(PIPE, kind="haloc_axa", backend="numpy")
+    pol = DegradePolicy(pipe, min_samples=256)
+    with pytest.raises(RuntimeError, match="telemetry"):
+        pol.observe(synthetic_batch(1, 32))
+
+
+def test_degrade_policy_never_degrades_healthy(fresh_obs):
+    from repro.resilience.degrade import DegradePolicy
+    pipe = compile_pipeline(PIPE, kind="haloc_axa", backend="numpy")
+    pol = DegradePolicy(pipe, min_samples=256)
+    batch = synthetic_batch(2, 32, seed=5)
+    for _ in range(4):
+        assert not pol.observe(batch)
+    assert pol.level == 0 and pol.trips == 0
+    assert pol.pipe is pipe
+
+
+def test_degrade_policy_trips_within_budget_and_recovers(fresh_obs):
+    """Acceptance: seeded stuck-at-1 campaign — the monitor trips inside
+    its sample budget (one observed batch here), the policy recovers
+    >= 5 dB PSNR versus no fallback, and the run is deterministic."""
+    from repro.resilience.harness import recovery_cell
+    rec = recovery_cell(min_samples=512)
+    assert rec["trips"] >= 1 and rec["degrade_level"] >= 1
+    assert rec["recovery_db"] >= 5.0
+    assert rec["batches_degraded"] >= 1
+    rec2 = recovery_cell(min_samples=512)
+    assert rec == rec2  # bit-for-bit deterministic replay
+    snap = obs.metrics_snapshot()
+    assert snap["counters"]["degrade.trips"] >= 1
+    assert snap["counters"]["degrade.fallbacks"] >= 1
+    assert snap["gauges"]["degrade.level"]["value"] >= 1
+
+
+def test_run_streaming_degrade_hook(fresh_obs):
+    from repro.resilience.degrade import DegradePolicy
+    fault = FaultSpec("stuck_at_1", bits=(11,))
+    pipe = compile_pipeline(PIPE, kind="haloc_axa", backend="numpy",
+                            fault=fault)
+    pol = DegradePolicy(pipe, min_samples=512)
+    batches = [synthetic_batch(2, 32, seed=9 + i) for i in range(3)]
+    r = run_streaming(pipe, batches, depth=2, degrade=pol)
+    assert pol.level >= 1
+    assert r.degraded and r.degraded[0] == 0  # tripping batch re-ran
+    assert r.failed == ()
+    # Every degraded output came from the recovered plan.
+    for i in r.degraded:
+        np.testing.assert_array_equal(np.asarray(r.outputs[i]),
+                                      np.asarray(pol.pipe(batches[i])))
+
+
+# -------------------------------------------------- campaign sweep --
+
+def test_quick_campaign_curves(fresh_obs):
+    from repro.resilience.harness import run_campaign
+    cells = run_campaign(quick=True, backend="numpy")
+    by_name = {("none" if c.fault is None else c.fault.short_name): c
+               for c in cells}
+    clean = by_name["none"]
+    assert np.isfinite(clean.psnr) and clean.ssim > 0.9
+    # Every defect costs quality, and harder defects cost more.
+    for name, c in by_name.items():
+        if name != "none":
+            assert c.psnr < clean.psnr
+    flips = sorted((c for c in cells
+                    if c.fault and c.fault.kind == "bit_flip"),
+                   key=lambda c: c.fault.rate)
+    psnrs = [c.psnr for c in flips]
+    assert psnrs == sorted(psnrs, reverse=True)  # PSNR falls with rate
+
+
+@pytest.mark.slow
+def test_full_campaign_grid():
+    """The full (non-quick) defect grid over both stock pipelines —
+    the long-running sweep CI's smoke job deliberately skips."""
+    from repro.resilience.harness import run_campaign
+    cells = run_campaign(quick=False, backend="numpy",
+                         workloads=tuple(PIPELINES))
+    assert len(cells) == len(PIPELINES) * (1 + 6)
+    assert all(np.isfinite(c.psnr) and 0 <= c.ssim <= 1 for c in cells)
