@@ -1,0 +1,130 @@
+"""Serving-layer traffic benchmark, committed to ``BENCH_serve.json``.
+
+Three deterministic simulated cells (virtual clock, seeded Poisson
+arrivals — pure functions of the code, ideal trajectory records) plus a
+real compiled-plan cell on the wall clock:
+
+- ``sim`` uncontended (0.2x capacity): the latency floor of the
+  batching path — p50/p99 with no queueing.
+- ``sim`` overload (2x capacity): the load-shedding contract — typed
+  reject/shed rates instead of unbounded queueing, bounded accepted-
+  request p99, goodput under saturation.
+- ``sim`` breaker: scripted consecutive executor failures trip the
+  circuit breaker; records trips and the retry cost of recovery.
+- ``numpy`` real cell: the full Scheduler -> PlanExecutor ->
+  compiled-pipeline path, estimator calibrated from a measured warm-up,
+  at ~0.25x measured capacity.
+
+Standalone: ``PYTHONPATH=src:. python -m benchmarks.bench_serve``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+
+def _sim_cell(name: str, load_x: float, n: int, seed: int, *,
+              depth: int = 64, backlog_s: float = float("inf"),
+              fail_first: int = 0):
+    """One seeded virtual-clock traffic cell at ``load_x`` times the
+    simulated executor's capacity for the mixed-size workload."""
+    from repro import serving as sv
+    pix_per_s = 1e6
+    mix = sv.TrafficMix(name, rate_rps=1.0, sizes=(32, 64),
+                        size_weights=(0.8, 0.2), deadline_s=0.05)
+    capacity_rps = pix_per_s / mix.mean_pixels
+    mix = sv.TrafficMix(name, rate_rps=load_x * capacity_rps,
+                        sizes=mix.sizes, size_weights=mix.size_weights,
+                        deadline_s=mix.deadline_s)
+    clk = sv.VirtualClock()
+    ex = sv.SimExecutor(clk, pix_per_s=pix_per_s, fail_first=fail_first)
+    breaker = sv.CircuitBreaker(sv.BreakerConfig(
+        failure_threshold=2, cooldown_s=0.005)) if fail_first else None
+    sched = sv.Scheduler(
+        ex, clock=clk, estimator=sv.CostEstimator(pix_per_s=pix_per_s),
+        admission=sv.AdmissionConfig(max_depth=depth,
+                                     max_backlog_s=backlog_s),
+        batching=sv.BatcherConfig(max_batch=4, max_wait_s=0.002),
+        config=sv.SchedulerConfig(max_retries=2, backoff_s=0.001),
+        breaker=breaker)
+    rep = sv.run_traffic(sched, sv.make_arrivals(mix, n=n, seed=seed),
+                         name)
+    return rep
+
+
+def _numpy_cell(n: int, seed: int):
+    """The real path: compiled numpy plans on the wall clock, estimator
+    calibrated from a measured warm-up, offered ~0.25x capacity."""
+    import numpy as np
+
+    from repro import serving as sv
+    from repro.image.pipeline import synthetic_image
+    ex = sv.PlanExecutor.compile(("pipe_blur_sharpen_down",),
+                                 backend="numpy")
+    clk = sv.WallClock()
+    est = sv.CostEstimator()
+    pix_per_s = est.calibrate(ex, synthetic_image(32, seed=0),
+                              "pipe_blur_sharpen_down", clk)
+    capacity_rps = pix_per_s / (32 * 32)
+    # Generous SLO headroom: a shared CI box has multi-hundred-ms
+    # scheduler stalls, and this cell's job is to exercise the real
+    # compiled path, not to assert wall-clock latency.
+    mix = sv.TrafficMix("numpy_lowload", rate_rps=0.25 * capacity_rps,
+                        sizes=(32,), deadline_s=2.0)
+    sched = sv.Scheduler(
+        ex, clock=clk, estimator=est,
+        admission=sv.AdmissionConfig(max_depth=64, max_backlog_s=1.0),
+        batching=sv.BatcherConfig(max_batch=4, max_wait_s=0.002))
+    rep = sv.run_traffic(sched, sv.make_arrivals(mix, n=n, seed=seed),
+                         mix.name)
+    return rep, float(np.round(pix_per_s / 1e6, 3))
+
+
+def run(quick: bool = True) -> Tuple[List[str], List[Dict]]:
+    lines: List[str] = []
+    records: List[Dict] = []
+
+    def emit(rep, *, load_x, backend, dt_us, extra=""):
+        rec = rep.record(load_x=load_x, backend=backend,
+                         kind="haloc_axa")
+        records.append(rec)
+        p99 = "nan" if rec["p99_ms"] is None else f"{rec['p99_ms']:.2f}"
+        lines.append(
+            f"serve/{rep.mix}/{backend}/load{load_x:g}x,{dt_us:.0f},"
+            f"p99_ms={p99};goodput={rep.goodput_mpix_per_s:.2f};"
+            f"shed={rep.shed_rate:.2f};reject={rep.reject_rate:.2f}"
+            f"{extra}")
+        print(f"{rep.mix:18s} load={load_x:g}x [{backend}] "
+              f"{rep.summary()}")
+
+    print("\n== Serving traffic (scheduler/batcher/breaker) ==")
+    t0 = time.perf_counter()
+    rep = _sim_cell("uncontended", 0.2, n=120 if quick else 400, seed=3)
+    emit(rep, load_x=0.2, backend="sim",
+         dt_us=(time.perf_counter() - t0) * 1e6)
+
+    t0 = time.perf_counter()
+    rep = _sim_cell("overload", 2.0, n=400 if quick else 1200, seed=4,
+                    depth=12, backlog_s=0.010)
+    emit(rep, load_x=2.0, backend="sim",
+         dt_us=(time.perf_counter() - t0) * 1e6)
+
+    t0 = time.perf_counter()
+    rep = _sim_cell("breaker", 0.5, n=60 if quick else 200, seed=5,
+                    fail_first=2)
+    emit(rep, load_x=0.5, backend="sim",
+         dt_us=(time.perf_counter() - t0) * 1e6,
+         extra=f";breaker_trips={rep.breaker_trips}")
+
+    t0 = time.perf_counter()
+    rep, cal_mpix = _numpy_cell(n=40 if quick else 160, seed=6)
+    emit(rep, load_x=0.25, backend="numpy",
+         dt_us=(time.perf_counter() - t0) * 1e6,
+         extra=f";calibrated_mpix_s={cal_mpix}")
+    return lines, records
+
+
+if __name__ == "__main__":
+    for ln in run()[0]:
+        print(ln)

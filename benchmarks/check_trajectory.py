@@ -52,7 +52,7 @@ def check(path: str) -> int:
 def main(argv) -> int:
     paths = argv or ["BENCH_imgproc.json", "BENCH_kernels.json",
                      "BENCH_table1.json", "BENCH_mac.json",
-                     "BENCH_faults.json"]
+                     "BENCH_faults.json", "BENCH_serve.json"]
     return max((check(p) for p in paths), default=0)
 
 

@@ -16,6 +16,9 @@ trajectory:
 - ``BENCH_faults.json``   — the fault-injection campaign (PSNR/SSIM
   vs defect kind/bit/rate) and the self-healing recovery cell
   (``repro.resilience``).
+- ``BENCH_serve.json``    — the serving-layer traffic cells
+  (``repro.serving``): latency/goodput/shed/reject rates per load
+  factor, plus the breaker-trip recovery cell.
 
 The JSON files are a TRAJECTORY: every run MERGES into the committed
 file instead of overwriting it — records whose identity (all
@@ -50,6 +53,9 @@ METRIC_FIELDS = frozenset({
     # fault-injection campaign + self-healing recovery (BENCH_faults)
     "psnr_nofallback", "psnr_fallback", "recovery_db",
     "degrade_level", "trips", "batches_degraded",
+    # serving traffic cells (BENCH_serve)
+    "completed", "goodput_mpix_per_s", "reject_rate", "shed_rate",
+    "deadline_miss_rate", "retries", "breaker_trips",
 })
 
 #: Fields that describe the MACHINE a record was measured on.  They are
@@ -110,8 +116,9 @@ def _dump(path: str, records) -> None:
 def main() -> None:
     quick = "--quick" in sys.argv
     from benchmarks import (bench_faults, bench_imgproc, bench_kernels,
-                            bench_mac, fig5_image, fig6_tradeoff,
-                            roofline, table1_error, table1_hw)
+                            bench_mac, bench_serve, fig5_image,
+                            fig6_tradeoff, roofline, table1_error,
+                            table1_hw)
     lines = []
     lines += table1_hw.run()
     t1_lines, t1_records = table1_error.run(
@@ -136,9 +143,12 @@ def main() -> None:
     lines += kern_lines
     flt_lines, flt_records = bench_faults.run(quick=quick)
     lines += flt_lines
+    srv_lines, srv_records = bench_serve.run(quick=quick)
+    lines += srv_lines
     lines += roofline.run()
     _dump("BENCH_kernels.json", kern_records)
     _dump("BENCH_faults.json", flt_records)
+    _dump("BENCH_serve.json", srv_records)
     _dump("BENCH_imgproc.json", img_records)
     _dump("BENCH_table1.json", t1_records + par_records)
     _dump("BENCH_mac.json", pmul_records + mac_records)

@@ -208,6 +208,10 @@ class StreamResult:
 
     @property
     def mpix_per_s(self) -> float:
+        # An empty (or instantaneously-timed) stream is a well-formed
+        # zero-throughput result, never a division error or a nan.
+        if self.pixels == 0 or self.seconds <= 0.0:
+            return 0.0
         return self.pixels / self.seconds / 1e6
 
     @property
@@ -253,6 +257,7 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
                   max_retries: int = 2,
                   backoff_s: float = 0.05,
                   isolate: bool = False,
+                  retry_failures: bool = False,
                   straggler=None,
                   degrade=None) -> StreamResult:
     """Async double-buffered executor: dispatch batch ``i+1`` BEFORE
@@ -289,6 +294,12 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
       re-raises as ``RuntimeError`` naming the failing batch index, and
       every still-pending future is drained or dropped first: an
       exception can never leak in-flight work.
+    - ``retry_failures=True``: a RAISING batch is also re-dispatched up
+      to ``max_retries`` times with the same exponential backoff
+      (transient device faults recover; its index lands in
+      ``retried``).  A batch that fails EVERY attempt then takes the
+      ``isolate`` path: recorded in ``failed`` (or re-raised when
+      ``isolate=False``) with its exhausted-attempt count in the error.
     - ``degrade``: a :class:`~repro.resilience.degrade.DegradePolicy`.
       Each batch is shown to the policy after dispatch; when the
       policy's drift monitor trips, the in-flight future is settled and
@@ -362,13 +373,32 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
         except Exception as exc:
             if instrumented:
                 in_flight.dec()
+            attempt = ent.attempt
+            if retry_failures:
+                # Transient-fault path: a raising batch re-dispatches
+                # with the same exponential backoff as the deadline
+                # path.  A re-dispatch that itself raises consumes the
+                # next attempt, so a hard-poisoned batch exhausts its
+                # budget here instead of looping forever.
+                while attempt < max_retries:
+                    if instrumented:
+                        n_retried.inc()
+                    retried.append(ent.index)
+                    time.sleep(backoff_s * (2 ** attempt))
+                    attempt += 1
+                    try:
+                        dispatch(ent.batch, ent.index, attempt)
+                        return
+                    except Exception as nxt:
+                        exc = nxt
+            if instrumented:
                 n_failed.inc()
             if isolate:
                 failed.append(ent.index)
                 return
             raise RuntimeError(
                 f"run_streaming: batch {ent.index} failed while draining"
-                f" (attempt {ent.attempt + 1}): {exc}") from exc
+                f" (attempt {attempt + 1}): {exc}") from exc
         if instrumented:
             in_flight.dec()
         lat = time.perf_counter() - ent.t
@@ -394,17 +424,38 @@ def run_streaming(fn: Callable, batches: Iterable[np.ndarray], *,
             if instrumented:
                 n_batches.inc()
                 n_pixels.inc(n)
+            dispatched = True
             try:
                 dispatch(batch, i, 0)
             except Exception as exc:
-                if not isolate:
-                    raise RuntimeError(
-                        f"run_streaming: batch {i} failed during "
-                        f"dispatch: {exc}") from exc
-                if instrumented:
-                    n_failed.inc()
-                failed.append(i)
-            else:
+                dispatched = False
+                attempt = 0
+                if retry_failures:
+                    # Same bounded retry budget as the drain path: a
+                    # synchronously-raising dispatch may be transient
+                    # (device hiccup) just like an async drain failure.
+                    while attempt < max_retries:
+                        if instrumented:
+                            n_retried.inc()
+                        retried.append(i)
+                        time.sleep(backoff_s * (2 ** attempt))
+                        attempt += 1
+                        try:
+                            dispatch(batch, i, attempt)
+                            dispatched = True
+                            break
+                        except Exception as nxt:
+                            exc = nxt
+                if not dispatched:
+                    if not isolate:
+                        raise RuntimeError(
+                            f"run_streaming: batch {i} failed during "
+                            f"dispatch (attempt {attempt + 1}): {exc}"
+                        ) from exc
+                    if instrumented:
+                        n_failed.inc()
+                    failed.append(i)
+            if dispatched:
                 if degrade is not None:
                     if degrade.observe(batch):
                         # Tripped on THIS batch: settle the suspect

@@ -167,18 +167,29 @@ class MetricsRegistry:
             self.gauges.clear()
             self.histograms.clear()
 
-    def snapshot(self) -> Dict[str, Dict]:
+    def snapshot(self, prefix: str = "") -> Dict[str, Dict]:
         """Plain-dict view: counters, gauges, histogram summaries, plus
-        the live named-cache stats (:mod:`repro.obs.caches`)."""
+        the live named-cache stats (:mod:`repro.obs.caches`).
+
+        ``prefix`` restricts the instrument tables to names starting
+        with it (``"serve."`` → just the serving layer's instruments) —
+        subsystem reports then stay readable next to a busy registry.
+        The cache table has no instrument names, so it is included only
+        for the unfiltered snapshot."""
         from repro.obs.caches import cache_stats
-        return {
-            "counters": {n: c.value for n, c in self.counters.items()},
+        snap: Dict[str, Dict] = {
+            "counters": {n: c.value for n, c in self.counters.items()
+                         if n.startswith(prefix)},
             "gauges": {n: {"value": g.value, "high_water": g.high_water}
-                       for n, g in self.gauges.items()},
+                       for n, g in self.gauges.items()
+                       if n.startswith(prefix)},
             "histograms": {n: h.summary()
-                           for n, h in self.histograms.items()},
-            "caches": cache_stats(),
+                           for n, h in self.histograms.items()
+                           if n.startswith(prefix)},
         }
+        if not prefix:
+            snap["caches"] = cache_stats()
+        return snap
 
 
 _REGISTRY = MetricsRegistry()
@@ -207,10 +218,11 @@ def histogram(name: str) -> Histogram:
     return _REGISTRY.histogram(name)
 
 
-def metrics_snapshot() -> Dict[str, Dict]:
+def metrics_snapshot(prefix: str = "") -> Dict[str, Dict]:
     """Snapshot of every instrument (works with telemetry off too —
-    whatever was recorded while it was on is still readable)."""
-    return _REGISTRY.snapshot()
+    whatever was recorded while it was on is still readable); an
+    optional name ``prefix`` filters to one subsystem's instruments."""
+    return _REGISTRY.snapshot(prefix)
 
 
 def write_metrics(path: str) -> str:

@@ -162,6 +162,15 @@ class DegradePolicy:
         self.monitor = self._budget(spec)
         self._shadow = self._numpy_twin(self.pipe, keep_fault=False)
 
+    def _trip(self) -> None:
+        """One recorded trip + fallback swap + metrics (shared by the
+        drift path and the externally-commanded path)."""
+        self.trips += 1
+        _metrics.counter("degrade.trips").inc()
+        self._fallback()
+        _metrics.counter("degrade.fallbacks").inc()
+        _metrics.gauge("degrade.level").set(self.level)
+
     # ------------------------------------------------------------- API --
 
     @property
@@ -169,6 +178,19 @@ class DegradePolicy:
         """No rungs left — the policy is already at its most accurate
         (normally exact) config."""
         return self.level >= len(self.ladder)
+
+    def force_fallback(self) -> bool:
+        """Externally-commanded degradation: step one rung down the
+        ladder WITHOUT a drift observation — the serving circuit
+        breaker's trip action (consecutive executor failures are
+        evidence of a sick operating point even when no drift sample
+        exists).  Returns False (and does nothing) when the ladder is
+        exhausted.  Unlike :meth:`observe`, needs no live telemetry:
+        there is no shadow capture involved."""
+        if self.exhausted:
+            return False
+        self._trip()
+        return True
 
     def observe(self, batch) -> bool:
         """Feed one batch's evidence to the drift monitor; returns True
@@ -191,12 +213,8 @@ class DegradePolicy:
             self._shadow(crop)
         if self.monitor.ok() or self.exhausted:
             return False
-        self.trips += 1
-        _metrics.counter("degrade.trips").inc()
-        self._fallback()
-        _metrics.counter("degrade.fallbacks").inc()
+        self._trip()
         _metrics.counter("degrade.retries").inc()
-        _metrics.gauge("degrade.level").set(self.level)
         return True
 
     def run(self, batch):

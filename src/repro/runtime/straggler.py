@@ -27,9 +27,12 @@ class StragglerConfig:
 
 
 class StragglerMonitor:
-    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+    def __init__(self, cfg: Optional[StragglerConfig] = None,
                  on_flag: Optional[Callable[[int, float], None]] = None):
-        self.cfg = cfg
+        # cfg defaults PER INSTANCE: a `cfg=StragglerConfig()` default
+        # argument is evaluated once at def time and the one (mutable)
+        # config object would be shared by every monitor in the process.
+        self.cfg = cfg if cfg is not None else StragglerConfig()
         self.on_flag = on_flag
         self.times: List[float] = []
         self.flagged: List[Tuple[int, float]] = []

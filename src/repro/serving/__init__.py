@@ -1,0 +1,80 @@
+"""``repro.serving`` — deadline-aware request scheduling over the
+compiled-plan / tiled / streaming stack.
+
+PR 8 hardened the inside of a stream (fault injection, drift-triggered
+degradation, deadline retries); this package is the FRONT DOOR: the
+layer that protects the pipeline from overload, expired work and
+persistently failing configs, and the seam where the ROADMAP's
+multi-device sharding will plug in.
+
+Components (each its own module, composed by :class:`Scheduler`):
+
+- :class:`Request` + typed outcomes (:class:`Completed`,
+  :class:`Rejected`, :class:`Shed`, :class:`Failed`) —
+  ``repro.serving.request``;
+- bounded admission queue with backpressure and priority preemption —
+  ``repro.serving.queue``;
+- deadline-aware dynamic batcher (dispatch on full / deadline margin /
+  max wait; shed expired and doomed work) — ``repro.serving.batcher``;
+- circuit breaker with Pareto-ladder degradation and half-open probes
+  — ``repro.serving.breaker``;
+- EWMA service-time estimator — ``repro.serving.estimator``;
+- injectable clocks (wall / virtual-deterministic) —
+  ``repro.serving.clock``;
+- executors (compiled plans or deterministic simulation) —
+  ``repro.serving.executor``;
+- seeded open-loop Poisson traffic + the ``BENCH_serve.json`` report —
+  ``repro.serving.traffic``.
+
+    from repro import serving
+
+    sched = serving.Scheduler(
+        serving.PlanExecutor.compile(("pipe_blur_sharpen_down",),
+                                     backend="numpy"),
+        admission=serving.AdmissionConfig(max_depth=64,
+                                          max_backlog_s=0.25),
+        batching=serving.BatcherConfig(max_batch=4, max_wait_s=0.005))
+    report = serving.run_traffic(
+        sched, serving.make_arrivals(serving.SMALL_MIX, n=200, seed=0))
+    print(report.summary())
+"""
+
+from repro.serving.batcher import Batch, Batcher, BatcherConfig  # noqa: F401
+from repro.serving.breaker import (  # noqa: F401
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    BreakerConfig,
+    CircuitBreaker,
+)
+from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.serving.estimator import CostEstimator  # noqa: F401
+from repro.serving.executor import PlanExecutor, SimExecutor  # noqa: F401
+from repro.serving.queue import AdmissionConfig, AdmissionQueue  # noqa: F401
+from repro.serving.request import (  # noqa: F401
+    Completed,
+    Failed,
+    Outcome,
+    Rejected,
+    Request,
+    Shed,
+)
+from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401
+from repro.serving.traffic import (  # noqa: F401
+    MIXED_MIX,
+    SMALL_MIX,
+    ServeReport,
+    TrafficMix,
+    make_arrivals,
+    run_traffic,
+)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionQueue", "Batch", "Batcher",
+    "BatcherConfig", "BreakerConfig", "CLOSED", "CircuitBreaker",
+    "Clock", "Completed", "CostEstimator", "Failed", "HALF_OPEN",
+    "MIXED_MIX", "OPEN", "Outcome", "PlanExecutor", "Rejected",
+    "Request", "Scheduler", "SchedulerConfig", "ServeReport", "Shed",
+    "SimExecutor", "SMALL_MIX", "TrafficMix", "VirtualClock",
+    "WallClock", "make_arrivals", "run_traffic",
+]

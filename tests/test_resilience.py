@@ -21,7 +21,8 @@ from jax.experimental import pallas as pl
 from repro import obs
 from repro.ax.lut import compile_lut, error_delta_table
 from repro.core.specs import AdderSpec
-from repro.imgproc.corpus import run_streaming, synthetic_batch
+from repro.imgproc.corpus import (StreamResult, run_streaming,
+                                  synthetic_batch)
 from repro.imgproc.plan import PIPELINES, compile_pipeline, run_pipeline
 from repro.resilience.faults import (FaultSpec, apply_fault, corrupt_lut,
                                      faulted_delta_table,
@@ -296,6 +297,98 @@ def test_deadline_retry_with_backoff():
     assert calls[1] == 2 and calls[0] == 1
     for i in range(4):
         np.testing.assert_array_equal(r.outputs[i], batches[i])
+
+
+def test_empty_stream_is_well_formed():
+    """Zero batches: a complete, zero-throughput StreamResult — no
+    division error, no nan, empty partitions."""
+    r = run_streaming(lambda b: b, [])
+    assert r.outputs == []
+    assert r.pixels == 0
+    assert r.mpix_per_s == 0.0
+    assert r.failed == r.retried == r.degraded == ()
+    assert r.batch_seconds == ()
+    # Direct zero-seconds guard (instantaneous streams, old pickles).
+    z = StreamResult(outputs=[], seconds=0.0, pixels=0)
+    assert z.mpix_per_s == 0.0
+
+
+def test_retry_failures_recovers_transient_dispatch_fault():
+    """retry_failures=True: a dispatch that raises ONCE re-dispatches
+    with backoff and the stream completes clean (transient device
+    hiccup, PR-9 semantics)."""
+    calls = collections.Counter()
+
+    def fn(batch):
+        i = int(batch[0, 0, 0])
+        calls[i] += 1
+        if i == 1 and calls[i] == 1:
+            raise RuntimeError("transient dispatch fault")
+        return batch
+
+    _, batches, _ = _poisoned_stream(n=4)
+    r = run_streaming(fn, batches, depth=2, retry_failures=True,
+                      max_retries=2, backoff_s=0.0)
+    assert r.retried == (1,)
+    assert r.failed == ()
+    assert calls[1] == 2
+    for i in range(4):
+        np.testing.assert_array_equal(r.outputs[i], batches[i])
+
+
+def test_retry_failures_recovers_transient_drain_fault():
+    """Same recovery for the async path: the FIRST future for a batch
+    poisons its drain, the re-dispatched one is healthy."""
+    seen = collections.Counter()
+
+    def fn(batch):
+        i = int(batch[0, 0, 0])
+        seen[i] += 1
+        return _Fut(batch, raise_on_drain=(i == 2 and seen[i] == 1))
+
+    _, batches, _ = _poisoned_stream(n=5)
+    r = run_streaming(fn, batches, depth=2, retry_failures=True,
+                      max_retries=2, backoff_s=0.0)
+    assert r.retried == (2,)
+    assert r.failed == ()
+    assert seen[2] == 2
+    for i in range(5):
+        np.testing.assert_array_equal(r.outputs[i], batches[i])
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_retry_exhaustion_lands_in_failed(depth):
+    """Satellite acceptance: a batch that fails EVERY retry surfaces in
+    ``StreamResult.failed`` with its index (isolate) after consuming
+    its full attempt budget."""
+    attempts = collections.Counter()
+
+    def fn(batch):
+        i = int(batch[0, 0, 0])
+        attempts[i] += 1
+        return _Fut(batch, raise_on_drain=(i == 2))
+
+    _, batches, _ = _poisoned_stream(n=5)
+    r = run_streaming(fn, batches, depth=depth, retry_failures=True,
+                      isolate=True, max_retries=2, backoff_s=0.0)
+    assert r.failed == (2,)
+    assert r.outputs[2] is None
+    assert 2 in r.retried
+    assert attempts[2] == 3           # first try + max_retries
+    for i in (0, 1, 3, 4):
+        np.testing.assert_array_equal(r.outputs[i], batches[i])
+
+
+def test_retry_exhaustion_without_isolate_raises_with_attempts():
+    def fn(batch):
+        if int(batch[0, 0, 0]) == 1:
+            raise RuntimeError("hard fault")
+        return batch
+
+    _, batches, _ = _poisoned_stream(n=3)
+    with pytest.raises(RuntimeError, match=r"batch 1 .*attempt 3"):
+        run_streaming(fn, batches, depth=2, retry_failures=True,
+                      max_retries=2, backoff_s=0.0)
 
 
 def test_run_streaming_rejects_bad_knobs():
