@@ -17,6 +17,32 @@ import time
 from typing import Dict, List, Tuple
 
 
+def run_integrity(quick: bool = True,
+                  backend: str = "numpy") -> Tuple[List[str], List[Dict]]:
+    """The PR-10 detection-coverage campaign: scrub + canary against
+    the seeded fault grid, as trajectory records (op=fault_detection)."""
+    from repro.resilience.harness import detection_campaign
+
+    t0 = time.perf_counter()
+    records = detection_campaign(quick=quick, backend=backend)
+    dt_us = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+    print("\n== Integrity detection campaign (scrub + canary) ==")
+    print(f"{'detector/fault':28s} {'coverage':>9s} {'latency s':>10s} "
+          f"{'fp':>5s}")
+    lines: List[str] = []
+    for r in records:
+        tag = f"{r['detector']}/{r['kind']}/{r['fault']}"
+        print(f"{tag:28s} {r['detected']:>4d}/{r['cells']:<4d} "
+              f"{r['detection_latency_s']:10.2f} "
+              f"{r['false_positive_rate']:5.3f}")
+        lines.append(
+            f"integrity/{tag}/{r['grid']},{dt_us:.0f},"
+            f"coverage={r['coverage']:.3f};"
+            f"latency_s={r['detection_latency_s']:.2f};"
+            f"fp={r['false_positive_rate']:.4f}")
+    return lines, records
+
+
 def run(quick: bool = True,
         backend: str = "numpy") -> Tuple[List[str], List[Dict]]:
     from repro.resilience.harness import recovery_cell, run_campaign
@@ -48,6 +74,10 @@ def run(quick: bool = True,
         f"recovery_db={rec['recovery_db']:.2f};"
         f"fallback={rec['fallback_to']}")
     records.append(rec)
+
+    det_lines, det_records = run_integrity(quick=quick, backend=backend)
+    lines += det_lines
+    records += det_records
     return lines, records
 
 

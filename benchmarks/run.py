@@ -56,6 +56,9 @@ METRIC_FIELDS = frozenset({
     # serving traffic cells (BENCH_serve)
     "completed", "goodput_mpix_per_s", "reject_rate", "shed_rate",
     "deadline_miss_rate", "retries", "breaker_trips",
+    # integrity detection campaign (BENCH_faults, op=fault_detection)
+    "detected", "cells", "coverage", "detection_latency_s",
+    "false_positive_rate",
 })
 
 #: Fields that describe the MACHINE a record was measured on.  They are

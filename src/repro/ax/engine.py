@@ -369,7 +369,8 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
                 fast: bool = False,
                 strategy: Optional[str] = None,
                 mul: Union[MulSpec, str, None] = None,
-                fault: Optional[FaultSpec] = None) -> AxEngine:
+                fault: Optional[FaultSpec] = None,
+                integrity: bool = False) -> AxEngine:
     """Build (or fetch the cached) execution engine.
 
     Args:
@@ -400,6 +401,12 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
         malformed rates raise ``ValueError`` here instead of silently
         wrapping in the mod-2^N arithmetic) and applied to every adder
         output bus.
+      integrity: verify-on-load — before the engine is returned, every
+        shared LUT it will gather from is compiled (or touched) and
+        re-hashed against its golden digest, repairing in place on
+        mismatch (:func:`repro.integrity.scrub.verify_engine_tables`);
+        an unrepairable table raises ``IOError`` instead of serving.
+        Default ``False``: the check is entirely skipped (zero cost).
     """
     strategy = resolve_strategy(strategy, fast)
     if isinstance(spec, MacSpec):
@@ -427,5 +434,8 @@ def make_engine(spec: Union[AdderSpec, MacSpec, str],
     resolved = get_backend(backend)
     if strategy == "auto":
         strategy = resolved.preferred_strategy(spec)
+    if integrity:
+        from repro.integrity.scrub import verify_engine_tables
+        verify_engine_tables(spec, mul_spec)
     return _make_engine_cached(spec, fmt, resolved, strategy, mul_spec,
                                fault)

@@ -32,6 +32,7 @@ import functools
 import numpy as np
 
 from repro.core.specs import AdderSpec
+from repro.integrity.digests import record_golden as _record_golden
 from repro.obs.caches import register_lru as _register_lru
 
 #: Widest LSM the LUT strategy compiles (2^{2m} uint16 entries).
@@ -113,12 +114,25 @@ def compile_lut(spec: AdderSpec) -> np.ndarray:
     low parts.  Cached per canonical spec: the same ``AdderSpec`` (by
     equality) always yields the same array object, and specs differing
     only in ``n_bits`` share it (see :func:`_canonical`).
+
+    Every compile registers the table's golden content digest with
+    :mod:`repro.integrity.digests` (the scrubber's detection source)
+    and, when the persistent compile cache is active, loads/publishes
+    the table through :mod:`repro.integrity.store` — a verified disk
+    hit replaces the build; a corrupt or stale entry silently falls
+    back to recompilation.
     """
     _validate_lut_spec(spec)
     canon = _canonical(spec)
     if canon != spec:
         return compile_lut(canon)
-    return _build_packed(spec)
+    from repro.integrity.store import cache_get, cache_put
+    table = cache_get("ax.lut.packed", spec)
+    if table is None:
+        table = _build_packed(spec)
+        cache_put("ax.lut.packed", spec, table)
+    return _record_golden("ax.lut.packed", (spec,), table,
+                          functools.partial(_build_packed, spec))
 
 
 @functools.lru_cache(maxsize=None)
@@ -134,7 +148,22 @@ def error_delta_table(spec: AdderSpec) -> np.ndarray:
     canon = _canonical(spec)
     if canon != spec:
         return error_delta_table(canon)
-    return _delta_from_packed(compile_lut(spec), spec.lsm_bits)
+    delta = _delta_from_packed(compile_lut(spec), spec.lsm_bits)
+    return _record_golden("ax.lut.delta", (spec,), delta,
+                          functools.partial(_build_delta, spec))
+
+
+def _build_delta(spec: AdderSpec) -> np.ndarray:
+    """Off-cache delta rebuild (the scrubber's repair source — built
+    from a FRESH packed table so a corrupted cached one cannot leak
+    into the repair)."""
+    return _delta_from_packed(_build_packed(spec), spec.lsm_bits)
+
+
+def _build_abs_error(spec: AdderSpec) -> np.ndarray:
+    ed = np.abs(_build_delta(spec)).astype(np.uint16)
+    ed.flags.writeable = False
+    return ed
 
 
 _register_lru("ax.lut.packed", compile_lut)
@@ -176,7 +205,8 @@ def abs_error_table(spec: AdderSpec) -> np.ndarray:
         return abs_error_table(canon)
     ed = np.abs(error_delta_table(spec)).astype(np.uint16)
     ed.flags.writeable = False
-    return ed
+    return _record_golden("ax.lut.abs_error", (spec,), ed,
+                          functools.partial(_build_abs_error, spec))
 
 
 _register_lru("ax.lut.abs_error", abs_error_table)

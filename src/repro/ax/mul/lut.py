@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.ax.mul.registry import get_multiplier
 from repro.ax.mul.specs import MulSpec
+from repro.integrity.digests import record_golden as _record_golden
 from repro.obs.caches import register_lru as _register_lru
 
 # Full-domain tables: 4^10 = 1M entries is the largest we compile.
@@ -89,7 +90,13 @@ def _mul_lut_nocache(spec: MulSpec) -> np.ndarray:
 
 @functools.lru_cache(maxsize=None)
 def _mul_lut_cached(spec: MulSpec) -> np.ndarray:
-    return _mul_lut_nocache(spec)
+    from repro.integrity.store import cache_get, cache_put
+    table = cache_get("ax.mul.lut.product", spec)
+    if table is None:
+        table = _mul_lut_nocache(spec)
+        cache_put("ax.mul.lut.product", spec, table)
+    return _record_golden("ax.mul.lut.product", (spec,), table,
+                          functools.partial(_mul_lut_nocache, spec))
 
 
 _register_lru("ax.mul.lut.product", _mul_lut_cached)
@@ -116,7 +123,10 @@ def mul_error_delta_table_nocache(spec: MulSpec) -> np.ndarray:
 
 @functools.lru_cache(maxsize=None)
 def _delta_cached(spec: MulSpec) -> np.ndarray:
-    return mul_error_delta_table_nocache(spec)
+    delta = mul_error_delta_table_nocache(spec)
+    return _record_golden(
+        "ax.mul.lut.delta", (spec,), delta,
+        functools.partial(mul_error_delta_table_nocache, spec))
 
 
 _register_lru("ax.mul.lut.delta", _delta_cached)
@@ -144,8 +154,7 @@ def lut_mul(a: np.ndarray, b: np.ndarray, spec: MulSpec) -> np.ndarray:
 
 # ------------------------------------------------- signed MAC tables --
 
-@functools.lru_cache(maxsize=None)
-def _signed_table_cached(spec: MulSpec) -> np.ndarray:
+def _signed_table_nocache(spec: MulSpec) -> np.ndarray:
     _check_compilable(spec)
     n = spec.n_bits
     patt = np.arange(1 << n, dtype=np.int64)
@@ -158,6 +167,17 @@ def _signed_table_cached(spec: MulSpec) -> np.ndarray:
     table = (sgn * prod).astype(np.int32)
     table.flags.writeable = False
     return table
+
+
+@functools.lru_cache(maxsize=None)
+def _signed_table_cached(spec: MulSpec) -> np.ndarray:
+    from repro.integrity.store import cache_get, cache_put
+    table = cache_get("ax.mul.lut.signed", spec)
+    if table is None:
+        table = _signed_table_nocache(spec)
+        cache_put("ax.mul.lut.signed", spec, table)
+    return _record_golden("ax.mul.lut.signed", (spec,), table,
+                          functools.partial(_signed_table_nocache, spec))
 
 
 _register_lru("ax.mul.lut.signed", _signed_table_cached)
@@ -175,9 +195,8 @@ def signed_mul_table(spec: MulSpec) -> np.ndarray:
     return _signed_table_cached(_canonical(spec))
 
 
-@functools.lru_cache(maxsize=None)
-def _tap_tables_cached(spec: MulSpec,
-                       weights: Tuple[int, ...]) -> np.ndarray:
+def _tap_tables_nocache(spec: MulSpec,
+                        weights: Tuple[int, ...]) -> np.ndarray:
     n = spec.n_bits
     limit = 1 << n
     for w in weights:
@@ -194,6 +213,15 @@ def _tap_tables_cached(spec: MulSpec,
     table = np.stack(rows)
     table.flags.writeable = False
     return table
+
+
+@functools.lru_cache(maxsize=None)
+def _tap_tables_cached(spec: MulSpec,
+                       weights: Tuple[int, ...]) -> np.ndarray:
+    table = _tap_tables_nocache(spec, weights)
+    return _record_golden(
+        "ax.mul.lut.taps", (spec, weights), table,
+        functools.partial(_tap_tables_nocache, spec, weights))
 
 
 _register_lru("ax.mul.lut.taps", _tap_tables_cached)

@@ -11,7 +11,6 @@
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import shutil
@@ -21,6 +20,8 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.ioutil import atomic_replace_dir, sha256_bytes, sha256_file
 
 
 def _flatten(tree):
@@ -56,16 +57,13 @@ class Checkpointer:
                 arr = np.asarray(leaf)
                 path = os.path.join(tmp, _leaf_name(i))
                 np.save(path, arr, allow_pickle=False)
-                with open(path, "rb") as f:
-                    digest = hashlib.sha256(f.read()).hexdigest()
+                digest = sha256_file(path)
                 manifest["leaves"].append(
                     {"file": _leaf_name(i), "sha256": digest,
                      "shape": list(arr.shape), "dtype": str(arr.dtype)})
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
+            atomic_replace_dir(tmp, final)  # atomic publish
             self._gc()
 
         if wait:
@@ -116,7 +114,7 @@ class Checkpointer:
             path = os.path.join(d, meta["file"])
             with open(path, "rb") as f:
                 raw = f.read()
-            digest = hashlib.sha256(raw).hexdigest()
+            digest = sha256_bytes(raw)
             if digest != meta["sha256"]:
                 raise IOError(f"integrity failure in {path}")
             arr = np.load(path, allow_pickle=False)

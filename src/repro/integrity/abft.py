@@ -1,0 +1,301 @@
+"""ABFT checksums for the MAC datapaths, calibrated by the exact
+error analytics.
+
+Classic algorithm-based fault tolerance (Huang & Abraham) checks a
+matmul by comparing row/column sums of the output against checksums
+computed from the inputs: ``sum_i C[i, j] == (sum_i A[i, :]) @ B[:, j]``
+— O(MK + KN) exact work guarding an O(MKN) product.  On an EXACT
+datapath any deviation is a fault.  On an *approximate* datapath the
+deviation is nonzero by design, so the acceptance band must be
+calibrated: this module derives it from the PR-5/PR-6 closed-form
+per-config moments — each output element folds ``n_adds`` approximate
+adds (mean |error| ``med_add``, variance ``var_add``, exact from
+:func:`repro.ax.analytics.exact_error_moments`) and ``n_products``
+approximate multiplies (moments taken exactly off the compiled mul
+delta table), so a checksum over ``count`` elements accepts within
+
+    band * count * (n_adds * med_add + n_products * med_mul)
+      + z * sqrt(count * (n_adds * var_add + n_products * var_mul))
+
+Design-intended approximation stays far inside the band (the mean term
+dominates and ``|sum err| <= sum |err|``); a stuck-at/bus fault at bit
+``b`` shifts every touched element by ~``2^b`` — orders of magnitude
+past it.  Flagged rows/columns (or conv images) are selectively
+recomputed on the exact datapath, so a detected fault degrades to
+exact results instead of serving silently-wrong sums.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
+
+__all__ = ["AbftVerdict", "AbftChecker", "mac_error_budget"]
+
+
+@functools.lru_cache(maxsize=None)
+def _add_moments(spec) -> Tuple[float, float]:
+    """(mean |error|, variance of |error|) per approximate add."""
+    from repro.ax.analytics import analytics_supported, \
+        exact_error_moments
+    from repro.ax.registry import get_adder
+    if get_adder(spec.kind).is_exact:
+        return 0.0, 0.0
+    if not analytics_supported(spec):
+        raise ValueError(
+            f"no exact moments for {spec.short_name}; ABFT bands need "
+            f"the closed-form analytics")
+    mom = exact_error_moments(spec)
+    return mom.med, mom.var_ed
+
+
+@functools.lru_cache(maxsize=None)
+def _mul_moments(mul_spec) -> Tuple[float, float]:
+    """(mean |error|, variance of |error|) per approximate product,
+    exact over the compiled delta table."""
+    from repro.ax.mul.lut import MAX_MUL_DELTA_BITS, \
+        mul_error_delta_table
+    if mul_spec is None or mul_spec.is_exact:
+        return 0.0, 0.0
+    if mul_spec.n_bits > MAX_MUL_DELTA_BITS:
+        raise ValueError(
+            f"no exact mul delta table for {mul_spec.short_name} "
+            f"(n_bits > {MAX_MUL_DELTA_BITS}); ABFT bands need it")
+    d = np.abs(mul_error_delta_table(mul_spec).astype(np.float64))
+    med = float(d.mean())
+    return med, float((d * d).mean() - med * med)
+
+
+def mac_error_budget(spec, mul_spec, count: int, n_adds: int,
+                     n_products: int, *, band: float = 2.0,
+                     z: float = 8.0) -> float:
+    """Accepted |checksum deviation| for a sum over ``count`` output
+    elements, each folding ``n_adds`` approximate adds and
+    ``n_products`` approximate products."""
+    med_a, var_a = _add_moments(spec)
+    med_m, var_m = _mul_moments(mul_spec)
+    mean = count * (n_adds * med_a + n_products * med_m)
+    var = count * (n_adds * var_a + n_products * var_m)
+    return band * mean + z * math.sqrt(var)
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftVerdict:
+    """One checked (and possibly repaired) MAC output.
+
+    ``out`` is the served array: the engine's output when clean, or a
+    copy with every flagged row/column/image recomputed on the exact
+    datapath when not."""
+
+    out: np.ndarray
+    ok: bool
+    flagged_rows: Tuple[int, ...]
+    flagged_cols: Tuple[int, ...]
+    max_deviation: float
+    budget: float
+
+    def __repr__(self) -> str:
+        return (f"AbftVerdict(ok={self.ok}, rows={self.flagged_rows}, "
+                f"cols={self.flagged_cols}, "
+                f"max_dev={self.max_deviation:.1f}, "
+                f"budget={self.budget:.1f})")
+
+
+class AbftChecker:
+    """Checksum-verified ``matmul``/``conv2d`` over one engine.
+
+    Args:
+      engine: the :class:`~repro.ax.engine.AxEngine` whose MAC ops are
+        checked (adder + optional multiplier specs drive the band).
+      band / z: acceptance-band knobs of :func:`mac_error_budget`.
+    """
+
+    def __init__(self, engine, *, band: float = 2.0, z: float = 8.0):
+        self.engine = engine
+        self.band = float(band)
+        self.z = float(z)
+        self.checks = 0
+        self.flags = 0
+
+    def _budget(self, count: int, n_adds: int, n_products: int) -> float:
+        return mac_error_budget(self.engine.spec, self.engine.mul_spec,
+                                count, n_adds, n_products,
+                                band=self.band, z=self.z)
+
+    # ---------------------------------------------------------- matmul --
+
+    def matmul(self, a, b, block=(128, 128, 128)) -> AbftVerdict:
+        """Run ``engine.matmul`` and verify it (row + column
+        checksums); flagged rows/columns are recomputed exactly."""
+        out = self.engine.matmul(a, b, block=block)
+        return self.verify_matmul(out, a, b, block=block)
+
+    def verify_matmul(self, out, a, b,
+                      block=(128, 128, 128)) -> AbftVerdict:
+        """Checksum-verify an already-computed matmul output."""
+        a64 = np.asarray(a).astype(np.int64)
+        b64 = np.asarray(b).astype(np.int64)
+        o64 = np.asarray(out).astype(np.int64)
+        m, k = a64.shape
+        n = b64.shape[1]
+        tiles = max(1, -(-k // int(block[2])))
+        n_adds = tiles - 1
+        n_products = k if (self.engine.mul_spec is not None
+                           and not self.engine.mul_spec.is_exact) else 0
+
+        col_dev = np.abs(o64.sum(axis=0) - a64.sum(axis=0) @ b64)
+        row_dev = np.abs(o64.sum(axis=1) - a64 @ b64.sum(axis=1))
+        col_budget = self._budget(m, n_adds, n_products)
+        row_budget = self._budget(n, n_adds, n_products)
+        bad_cols = tuple(int(j) for j in
+                         np.flatnonzero(col_dev > col_budget))
+        bad_rows = tuple(int(i) for i in
+                         np.flatnonzero(row_dev > row_budget))
+        max_dev = float(max(col_dev.max(initial=0),
+                            row_dev.max(initial=0)))
+        ok = not bad_cols and not bad_rows
+        self._count(ok)
+        if ok:
+            return AbftVerdict(out=np.asarray(out), ok=True,
+                               flagged_rows=(), flagged_cols=(),
+                               max_deviation=max_dev, budget=col_budget)
+        repaired = np.array(out, copy=True)
+        exact = None
+        # Exact-datapath recompute of just the flagged strips: plain
+        # integer MAC, cast back through the output container.
+        if bad_cols:
+            exact = a64 @ b64 if exact is None else exact
+            repaired[:, list(bad_cols)] = self._wrap(
+                exact[:, list(bad_cols)], repaired.dtype)
+        if bad_rows:
+            exact = a64 @ b64 if exact is None else exact
+            repaired[list(bad_rows), :] = self._wrap(
+                exact[list(bad_rows), :], repaired.dtype)
+        return AbftVerdict(out=repaired, ok=False,
+                           flagged_rows=bad_rows, flagged_cols=bad_cols,
+                           max_deviation=max_dev, budget=col_budget)
+
+    # ---------------------------------------------------------- conv2d --
+
+    def conv2d(self, q, kernel, shift: int = 0) -> AbftVerdict:
+        """Run ``engine.conv2d`` and verify per-image total-sum
+        checksums; flagged images are recomputed exactly."""
+        out = self.engine.conv2d(q, kernel, shift=shift)
+        return self.verify_conv2d(out, q, kernel, shift=shift)
+
+    def verify_conv2d(self, out, q, kernel,
+                      shift: int = 0) -> AbftVerdict:
+        """Checksum-verify an already-computed conv2d output.
+
+        The product-sum checksum commutes with the tap structure:
+        ``sum_pixels acc = sum_t sum_pixels product_t(padded_view_t)``
+        — one O(pixels) pass per tap.  For an approximate multiplier
+        the per-tap products are gathered from FRESHLY-BUILT tap
+        columns (off-cache, 2^N entries per tap — immune to cached-LUT
+        corruption), so the multiplier's design error is inside the
+        checksum and only the adder folds + the rounding shift (at most
+        ``2^{shift-1}`` per pixel) remain in the band."""
+        q64 = np.asarray(q).astype(np.int64)
+        o64 = np.asarray(out).astype(np.int64)
+        if q64.ndim == 2:
+            q64, o64 = q64[None], o64[None]
+        weights = [w for row in kernel for w in row]
+        taps = len(weights)
+        pixels = int(q64.shape[-2] * q64.shape[-1])
+        budget = self._budget(pixels, taps - 1, 0)
+        if shift:
+            budget += pixels * float(1 << (shift - 1))
+
+        tap_cols = self._tap_columns(kernel)
+        exact_sums = np.array([self._conv_checksum(img, kernel, tap_cols)
+                               for img in q64])
+        got_sums = o64.sum(axis=(-2, -1)) * (1 << shift)
+        dev = np.abs(got_sums - exact_sums)
+        bad = tuple(int(i) for i in np.flatnonzero(dev > budget))
+        ok = not bad
+        self._count(ok)
+        served = np.asarray(out)
+        if not ok:
+            served = np.array(out, copy=True)
+            flat = served if served.ndim == 3 else served[None]
+            for i in bad:
+                flat[i] = self._exact_conv(q64[i], kernel, shift) \
+                    .astype(served.dtype)
+        return AbftVerdict(out=served, ok=ok, flagged_rows=bad,
+                           flagged_cols=(),
+                           max_deviation=float(dev.max(initial=0)),
+                           budget=budget)
+
+    # ------------------------------------------------------- internals --
+
+    def _tap_columns(self, kernel) -> Optional[np.ndarray]:
+        """Fresh (off-cache) per-tap signed product columns when the
+        engine multiplies approximately; None on the exact-product
+        path, where ``w * sum(view)`` needs no table."""
+        ms = self.engine.mul_spec
+        if ms is None or ms.is_exact:
+            return None
+        from repro.ax.mul.lut import _canonical, _tap_tables_nocache
+        weights = tuple(int(w) for row in kernel for w in row)
+        return _tap_tables_nocache(_canonical(ms), weights)
+
+    @staticmethod
+    def _conv_checksum(img: np.ndarray, kernel,
+                       tap_cols: Optional[np.ndarray]) -> int:
+        kh, kw = len(kernel), len(kernel[0])
+        ph, pw = kh // 2, kw // 2
+        h, w = img.shape
+        p = np.pad(img, ((ph, ph), (pw, pw)), mode="edge")
+        total = 0
+        t = 0
+        for r, row in enumerate(kernel):
+            for c, wt in enumerate(row):
+                view = p[r:r + h, c:c + w]
+                if tap_cols is None:
+                    total += int(wt) * int(view.sum())
+                else:
+                    prods = np.take(tap_cols[t],
+                                    np.abs(view)).astype(np.int64)
+                    total += int(np.where(view < 0, -prods, prods).sum())
+                t += 1
+        return total
+
+    @staticmethod
+    def _exact_conv(img: np.ndarray, kernel, shift: int) -> np.ndarray:
+        kh, kw = len(kernel), len(kernel[0])
+        ph, pw = kh // 2, kw // 2
+        h, w = img.shape
+        p = np.pad(img, ((ph, ph), (pw, pw)), mode="edge")
+        acc = np.zeros((h, w), dtype=np.int64)
+        for r, row in enumerate(kernel):
+            for c, wt in enumerate(row):
+                acc += int(wt) * p[r:r + h, c:c + w]
+        if shift:
+            acc = (acc + (1 << (shift - 1))) >> shift
+        return acc
+
+    @staticmethod
+    def _wrap(x64: np.ndarray, dtype) -> np.ndarray:
+        width = 8 * np.dtype(dtype).itemsize
+        return (x64 & ((1 << width) - 1)).astype(
+            np.dtype(f"u{np.dtype(dtype).itemsize}")).astype(dtype)
+
+    def _count(self, ok: bool) -> None:
+        self.checks += 1
+        if not ok:
+            self.flags += 1
+        if _obs._ENABLED:
+            _metrics.counter("integrity.abft_checks").inc()
+            if not ok:
+                _metrics.counter("integrity.abft_flags").inc()
+
+    def __repr__(self) -> str:
+        return (f"AbftChecker({self.engine.spec.short_name}, "
+                f"checks={self.checks}, flags={self.flags})")

@@ -1,0 +1,109 @@
+"""Golden content digests for compiled lookup tables.
+
+Every shared LUT in the process — adder low-part tables, multiplier
+product/signed/tap tables, their delta derivatives — is registered here
+at compile time with a SHA-256 **golden digest** of its contents plus a
+rebuild closure.  The scrubber (:mod:`repro.integrity.scrub`) walks
+this registry to detect silent corruption of the live arrays (a flipped
+SRAM cell, a stray write through a ``writeable`` escape hatch) and to
+repair them in place from a fresh off-cache rebuild.
+
+This module is a LEAF: it imports only ``hashlib``/``numpy`` so the
+table compilers (:mod:`repro.ax.lut`, :mod:`repro.ax.mul.lut`) can
+register without any import cycle through the engine or serving stack.
+
+Registration is a one-time cost per table compile (one SHA-256 over a
+table that just took orders of magnitude longer to build) and the
+registry is pull-based — nothing here runs unless a scrubber or the
+``integrity=`` engine knob asks, so the hot path pays nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["GoldenEntry", "table_digest", "record_golden",
+           "golden_entries", "golden_digest", "verify_entry",
+           "registry_size", "clear_registry"]
+
+
+def table_digest(table: np.ndarray) -> str:
+    """Hex SHA-256 over a table's dtype, shape, and raw bytes.
+
+    Covering dtype/shape means a corrupted reinterpretation (same
+    bytes, different view) can never collide with the golden."""
+    h = hashlib.sha256()
+    h.update(np.dtype(table.dtype).str.encode())
+    h.update(repr(tuple(table.shape)).encode())
+    h.update(np.ascontiguousarray(table).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldenEntry:
+    """One registered table: where it lives and how to rebuild it.
+
+    Attributes:
+      cache: the :mod:`repro.obs.caches` facade name of the owning
+        cache (``"ax.lut.packed"``, ``"ax.mul.lut.signed"``, ...).
+      key: the canonical cache key (spec, plus weights for tap tables).
+      digest: SHA-256 of the healthy table contents at compile time.
+      table: the LIVE cached array object (the same object jit caches
+        and the analytics alias — which is exactly why scrubbing it
+        matters).
+      rebuild: zero-argument closure producing a fresh, off-cache
+        rebuild of the same table (the repair source).
+    """
+
+    cache: str
+    key: Tuple
+    digest: str
+    table: np.ndarray
+    rebuild: Callable[[], np.ndarray]
+
+
+_REGISTRY: Dict[Tuple[str, Tuple], GoldenEntry] = {}
+
+
+def record_golden(cache: str, key: Tuple, table: np.ndarray,
+                  rebuild: Callable[[], np.ndarray]) -> np.ndarray:
+    """Register ``table`` under ``(cache, key)``; returns it unchanged.
+
+    Called by the cached table builders at compile time.  Re-compiling
+    the same key (e.g. after an lru ``cache_clear`` in tests) simply
+    re-registers the fresh object."""
+    _REGISTRY[(cache, key)] = GoldenEntry(
+        cache=cache, key=key, digest=table_digest(table), table=table,
+        rebuild=rebuild)
+    return table
+
+
+def golden_entries(cache: Optional[str] = None) -> Tuple[GoldenEntry, ...]:
+    """All registered entries (optionally restricted to one cache),
+    in registration order."""
+    return tuple(e for e in _REGISTRY.values()
+                 if cache is None or e.cache == cache)
+
+
+def golden_digest(cache: str, key: Tuple) -> Optional[str]:
+    e = _REGISTRY.get((cache, key))
+    return None if e is None else e.digest
+
+
+def verify_entry(entry: GoldenEntry) -> bool:
+    """Whether the live table still hashes to its golden digest."""
+    return table_digest(entry.table) == entry.digest
+
+
+def registry_size() -> int:
+    return len(_REGISTRY)
+
+
+def clear_registry() -> None:
+    """Forget every golden (test isolation only — a cleared registry
+    cannot detect corruption of tables compiled before the clear)."""
+    _REGISTRY.clear()

@@ -192,6 +192,17 @@ class DegradePolicy:
         self._trip()
         return True
 
+    def on_integrity_alarm(self, report=None) -> bool:
+        """An integrity detection (LUT scrub hit, failed canary, ABFT
+        flag) from :mod:`repro.integrity`: observed corruption in the
+        datapath is at least as damning as measured drift, so step one
+        rung down the ladder.  ``report`` (a Scrub/Canary report) is
+        accepted for the alarm-feed signature and recorded in metrics
+        only.  Needs no live telemetry, like :meth:`force_fallback`."""
+        if _obs._ENABLED:
+            _metrics.counter("degrade.integrity_alarms").inc()
+        return self.force_fallback()
+
     def observe(self, batch) -> bool:
         """Feed one batch's evidence to the drift monitor; returns True
         when this observation TRIPPED it and a fallback swap just

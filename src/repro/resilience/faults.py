@@ -191,13 +191,34 @@ def _site_index(shape, xp):
 
 # ------------------------------------------------ operator-level mask --
 
+def _const(value: int, dtype) -> "np.generic":
+    """``value`` as a ``dtype`` scalar, two's-complement-wrapped.
+
+    ``dtype.type(value)`` raises OverflowError the moment a bit-31 mask
+    (or the N=32 all-ones/sign constants) meets an int32 lane container
+    — the jax image datapath's native dtype — even though the BIT
+    pattern fits the container exactly.  Wrapping into the container
+    width keeps the single portable implementation correct at the
+    ``n_bits == container width`` boundary on every backend.
+    """
+    dt = np.dtype(dtype)
+    width = 8 * dt.itemsize
+    value &= (1 << width) - 1
+    if dt.kind == "i" and value >= (1 << (width - 1)):
+        value -= 1 << width
+    return dt.type(value)
+
+
 def apply_fault(x, fault: FaultSpec, n_bits: int, signed: bool = False):
     """Inject ``fault`` into the N-bit output bus values ``x``.
 
     Portable operators only (``& | ^ >> where``): ``x`` may be a numpy
     uint64 container array, a jax uint32/int32 array, or a jit tracer —
     the faulted datapath stays bit-identical across backends exactly
-    like the healthy one.
+    like the healthy one.  Bit ``n_bits - 1`` of a signed container is
+    the two's-complement sign bit; all constants go through
+    :func:`_const` so targeting it (or running at ``n_bits`` equal to
+    the container width) wraps instead of overflowing.
 
     ``signed=True`` treats ``x`` as two's-complement N-bit containers
     held in a wider signed dtype (the ``filter_chain`` Q-domain): the
@@ -206,17 +227,17 @@ def apply_fault(x, fault: FaultSpec, n_bits: int, signed: bool = False):
     """
     xp = np if isinstance(x, np.ndarray) else _jnp()
     t = x.dtype.type
-    full = t((1 << n_bits) - 1)
+    full = _const((1 << n_bits) - 1, x.dtype)
     u = (x & full) if signed else x
     if fault.kind == "stuck_at_1":
-        u = u | t(fault.mask)
+        u = u | _const(fault.mask, x.dtype)
     elif fault.kind == "stuck_at_0":
-        u = u & t(((1 << n_bits) - 1) ^ fault.mask)
+        u = u & _const(((1 << n_bits) - 1) ^ fault.mask, x.dtype)
     else:  # bit_flip
         flips = transient_flip_mask(_site_index(x.shape, xp), fault)
         u = u ^ flips.astype(x.dtype)
     if signed:
-        sign = t(1 << (n_bits - 1))
+        sign = _const(1 << (n_bits - 1), x.dtype)
         u = u - ((u & sign) << t(1))
     elif fault.kind == "stuck_at_1" and n_bits < 8 * x.dtype.itemsize:
         u = u & full  # targeted bits are in range, but keep the contract

@@ -133,6 +133,15 @@ class CircuitBreaker:
         if self.state != OPEN:
             self._trip(now)
 
+    def record_integrity(self, now: float) -> None:
+        """An integrity alarm (LUT scrub detection, failed canary,
+        ABFT flag): corruption was OBSERVED, not suspected — trip
+        immediately, same contract as :meth:`record_drift`."""
+        if _obs._ENABLED:
+            _metrics.counter("serve.integrity_alarms").inc()
+        if self.state != OPEN:
+            self._trip(now)
+
     def _trip(self, now: float) -> None:
         self.trips += 1
         self.state = OPEN

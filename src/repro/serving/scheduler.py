@@ -103,6 +103,12 @@ class Scheduler:
         same construction :func:`repro.imgproc.corpus.run_streaming`
         uses, so the one ``late`` definition judges serving timeouts
         too.
+      integrity: optional integrity watchdog(s) — anything with the
+        ``maybe_run(now)`` cadence protocol
+        (:class:`~repro.integrity.scrub.LutScrubber`,
+        :class:`~repro.integrity.canary.CanarySuite`); ticked at the
+        top of every :meth:`pump` on the scheduler's clock, so scrub
+        and canary cadences ride the serving loop with no extra thread.
     """
 
     def __init__(self, executor, *, clock: Optional[Clock] = None,
@@ -111,7 +117,7 @@ class Scheduler:
                  batching: Optional[BatcherConfig] = None,
                  config: Optional[SchedulerConfig] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 straggler=None):
+                 straggler=None, integrity=None):
         from repro.runtime.straggler import (StragglerConfig,
                                              StragglerMonitor)
         self.executor = executor
@@ -124,6 +130,12 @@ class Scheduler:
         self.breaker = breaker
         self.straggler = straggler if straggler is not None else \
             StragglerMonitor(StragglerConfig(min_samples=1 << 30))
+        if integrity is None:
+            self.integrity = ()
+        elif hasattr(integrity, "maybe_run"):
+            self.integrity = (integrity,)
+        else:
+            self.integrity = tuple(integrity)
         self.outcomes: List[Outcome] = []
         self._batch_seq = 0
 
@@ -166,6 +178,11 @@ class Scheduler:
         instrumented = _obs._ENABLED
         produced: List[Outcome] = []
         now = self.clock.now()
+        # Integrity watchdogs tick before any dispatch: a scrub/canary
+        # detection this instant can trip the breaker and block the
+        # batches below from running on a corrupted datapath.
+        for watchdog in self.integrity:
+            watchdog.maybe_run(now)
         for shed in self.batcher.shed(self.queue, now):
             self._emit(shed, instrumented)
             produced.append(shed)

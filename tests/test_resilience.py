@@ -116,6 +116,49 @@ def test_apply_fault_signed_sign_extension():
 
 
 @pytest.mark.parametrize("fault", [
+    FaultSpec("stuck_at_1", bits=(31,)),
+    FaultSpec("stuck_at_0", bits=(31,)),
+    FaultSpec("bit_flip", bits=(31,), rate=1.0, seed=5),
+], ids=lambda f: f.short_name)
+def test_apply_fault_int32_container_boundary(fault):
+    """Satellite 2 regression: faulting bit 31 on an int32 container.
+
+    ``1 << 31`` (and the all-ones clear mask) exceed int32's positive
+    range, so the old per-dtype constant casts raised OverflowError —
+    exactly at the n_bits == container-width boundary the jax/Pallas
+    lanes use for N=32 buses.  The constants must wrap two's-complement
+    instead; the wide-container numpy path is the ground truth."""
+    rng = np.random.default_rng(1)
+    x64 = rng.integers(0, 1 << 32, 512, dtype=np.uint64)
+    want = np.asarray(apply_fault(x64, fault, 32)).astype(np.uint32)
+    got_i32 = np.asarray(apply_fault(
+        jnp.asarray(x64.astype(np.uint32)).astype(jnp.int32), fault, 32))
+    np.testing.assert_array_equal(got_i32.view(np.uint32), want)
+    got_np_i32 = apply_fault(x64.astype(np.uint32).astype(np.int32),
+                             fault, 32)
+    np.testing.assert_array_equal(got_np_i32.view(np.uint32), want)
+
+
+@pytest.mark.parametrize("n_bits,dtype", [(16, np.int16), (32, np.int32)])
+def test_apply_fault_signed_sign_bit_at_container_width(n_bits, dtype):
+    """Forcing the sign bit (bit n_bits-1) on a signed container whose
+    width equals n_bits: the sign-extension shift must not overflow and
+    every output stays a valid n_bits two's-complement value."""
+    lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+    q = np.array([lo, -1, 0, 1, hi], dtype=np.int64)
+    fault = FaultSpec("stuck_at_1", bits=(n_bits - 1,))
+    want = apply_fault(q, fault, n_bits, signed=True)
+    assert (want < 0).all() and (want >= lo).all()
+    got = apply_fault(q.astype(dtype), fault, n_bits, signed=True)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+    # and clearing it makes everything non-negative
+    clear = FaultSpec("stuck_at_0", bits=(n_bits - 1,))
+    got0 = apply_fault(q.astype(dtype), clear, n_bits, signed=True)
+    assert (got0.astype(np.int64) >= 0).all() and \
+        (got0.astype(np.int64) <= hi).all()
+
+
+@pytest.mark.parametrize("fault", [
     FaultSpec("stuck_at_1", bits=(11,), seed=0),
     FaultSpec("bit_flip", bits=(4, 11), rate=0.25, seed=3),
 ], ids=lambda f: f.short_name)
